@@ -1,0 +1,78 @@
+"""Shared benchmark plumbing: variant registry + table formatting."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import (BuildConfig, build_task_cascade,
+                                 evaluate_on, model_cascade,
+                                 restructure_top25)
+from repro.core.simulation import make_workload
+
+ALL_WORKLOADS = ("agnews", "court", "enron", "fever", "games", "legal",
+                 "pubmed", "wiki_talk")
+N_DOCS = 1000
+N_DEV = 200
+
+
+def split(workload, seed: int = 0):
+    n = workload.n_docs
+    rng = np.random.default_rng(1000 + seed)
+    perm = rng.permutation(n)
+    return workload.subset(perm[:N_DEV]), workload.subset(perm[N_DEV:])
+
+
+def run_variant(name: str, wname: str, alpha: float = 0.9, seed: int = 0,
+                n_docs: int = N_DOCS) -> Dict[str, float]:
+    """Build + evaluate one method variant on one workload."""
+    reorder = "learned"
+    bc = BuildConfig(alpha=alpha, seed=seed)
+    if name == "naive_rag":
+        reorder = "rag"
+    elif name == "rag_nosur":
+        reorder = "rag"
+        bc = BuildConfig(alpha=alpha, seed=seed, use_surrogates=False)
+    elif name == "no_filtering":
+        reorder = "none"
+        bc = BuildConfig(alpha=alpha, seed=seed, fractions=(1.0,))
+    elif name == "no_surrogates":
+        bc = BuildConfig(alpha=alpha, seed=seed, use_surrogates=False)
+    elif name == "single_iteration":
+        bc = BuildConfig(alpha=alpha, seed=seed, single_iteration=True)
+    elif name == "selectivity":
+        bc = BuildConfig(alpha=alpha, seed=seed, ordering="selectivity")
+    elif name == "task_cascades_g":
+        bc = BuildConfig(alpha=alpha, seed=seed, guarantee=True)
+    elif name == "lite":
+        bc = BuildConfig(alpha=alpha, seed=seed, lite=True)
+
+    w = make_workload(wname, n_docs, reorder_mode=reorder)
+    dev, test = split(w, seed)
+    t0 = time.time()
+    if name == "oracle_only":
+        cm = test.cost_model()
+        return {"accuracy": 1.0, "total_cost": cm.oracle_only_cost(),
+                "n_tasks": 0, "build_s": 0.0}
+    if name == "model_cascade":
+        out = model_cascade(dev, alpha, seed=seed)
+    elif name == "model_cascade_g":
+        out = model_cascade(dev, alpha, guarantee=True, seed=seed)
+    elif name == "restructure_top25":
+        out = restructure_top25(dev, alpha)
+    else:
+        out = build_task_cascade(dev, bc)
+    r = evaluate_on(test, out)
+    r["build_s"] = time.time() - t0
+    r["n_candidates"] = len(getattr(out, "candidate_configs", []) or [])
+    return r
+
+
+def fmt_table(headers: List[str], rows: List[List[str]]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)

@@ -1,0 +1,38 @@
+"""Paper Figure 4: run-to-run cost variance of the +Guarantees variants."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import fmt_table, run_variant
+
+WORKLOADS = ("enron", "legal", "games", "court", "agnews")
+
+
+def run(n_runs: int = 10, quick: bool = False):
+    workloads = WORKLOADS[:2] if quick else WORKLOADS
+    runs = 4 if quick else n_runs
+    rows = []
+    dists = {}
+    for w in workloads:
+        tc = [run_variant("task_cascades_g", w, seed=s,
+                          n_docs=400 if quick else 1000)["total_cost"]
+              for s in range(runs)]
+        mc = [run_variant("model_cascade_g", w, seed=s,
+                          n_docs=400 if quick else 1000)["total_cost"]
+              for s in range(runs)]
+        dists[w] = {"tc": tc, "mc": mc}
+        rows.append([
+            w,
+            f"{np.mean(tc):.2f} / {np.median(tc):.2f} (sd {np.std(tc):.2f})",
+            f"{np.mean(mc):.2f} / {np.median(mc):.2f} (sd {np.std(mc):.2f})",
+            "yes" if np.mean(tc) <= np.mean(mc) else "no",
+        ])
+    table = fmt_table(
+        ["workload", "TC+G mean/median cost", "MC+G mean/median cost",
+         "TC mean <= MC mean"], rows)
+    print(table)
+    return {"table": table, "dists": dists}
+
+
+if __name__ == "__main__":
+    run()

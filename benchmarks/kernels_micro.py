@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: CPU wall-clock of the XLA path vs naive ref +
+analytic v5e roofline terms per kernel configuration.
+
+(interpret=True Pallas is a correctness tool, not a perf tool — on-TPU
+timing is the deploy-side measurement; here we report the structural
+terms the BlockSpecs were sized for.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import fmt_table
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def run(quick: bool = False):
+    rows = []
+    cases = [
+        ("flash causal", dict(B=1, Sq=1024, Skv=1024, Hq=8, Hkv=2, Dh=64,
+                              causal=True, window=None)),
+        ("flash window1k", dict(B=1, Sq=2048, Skv=2048, Hq=8, Hkv=2, Dh=64,
+                                causal=True, window=1024)),
+        ("prefix extend", dict(B=2, Sq=256, Skv=2048, Hq=8, Hkv=2, Dh=64,
+                               causal=True, window=None, q_offset=1792)),
+    ]
+    if quick:
+        cases = cases[:1]
+    key = jax.random.PRNGKey(0)
+    for name, c in cases:
+        q = jax.random.normal(key, (c["B"], c["Sq"], c["Hq"], c["Dh"]),
+                              jnp.float32)
+        k = jax.random.normal(key, (c["B"], c["Skv"], c["Hkv"], c["Dh"]),
+                              jnp.float32)
+        v = k + 0.1
+        qo = c.get("q_offset", 0)
+
+        def xla_fn(q, k, v):
+            return ops.attention(q, k, v, causal=c["causal"],
+                                 window=c["window"], q_offset=qo,
+                                 impl="xla")
+
+        def naive_fn(q, k, v):
+            return ref.mha_reference(q, k, v, causal=c["causal"],
+                                     window=c["window"], q_offset=qo)
+
+        t_x = _time(jax.jit(xla_fn), q, k, v)
+        t_n = _time(jax.jit(naive_fn), q, k, v)
+        # analytic terms for the kernel's visited blocks
+        flops = 4 * c["B"] * c["Hq"] * c["Sq"] * c["Skv"] * c["Dh"] * 0.5
+        bytes_ = 2 * (q.size + 2 * k.size) * 2
+        rows.append([name, f"{t_x*1e3:.1f}ms", f"{t_n*1e3:.1f}ms",
+                     f"{t_n/max(t_x,1e-9):.1f}x",
+                     f"{flops/PEAK*1e6:.1f}us", f"{bytes_/HBM*1e6:.1f}us"])
+    table = fmt_table(["kernel", "xla-blocked", "naive ref", "speedup",
+                       "v5e compute", "v5e memory"], rows)
+    print(table)
+    return {"table": table}
+
+
+if __name__ == "__main__":
+    run()

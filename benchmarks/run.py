@@ -1,0 +1,50 @@
+"""Benchmark runner: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints each table and a cross-check against the paper's headline claims.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small doc counts / fewer trials (CI mode)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from . import (fig4_variance, fig5_tradeoff, fig7_sensitivity,
+                   kernels_micro, table3_main, table4_breakeven)
+
+    sections = [
+        ("table3_main", lambda: table3_main.run(quick=args.quick)),
+        ("table4_breakeven", lambda: table4_breakeven.run(quick=args.quick)),
+        ("fig4_variance", lambda: fig4_variance.run(quick=args.quick)),
+        ("fig5_tradeoff", lambda: fig5_tradeoff.run(quick=args.quick)),
+        ("fig7_sensitivity", lambda: fig7_sensitivity.run(quick=args.quick)),
+        ("kernels_micro", lambda: kernels_micro.run(quick=args.quick)),
+    ]
+    results = {}
+    for name, fn in sections:
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        t0 = time.time()
+        results[name] = fn()
+        print(f"[{name}: {time.time() - t0:.0f}s]")
+    if args.out:
+        serializable = {k: v.get("table", "") for k, v in results.items()}
+        with open(args.out, "w") as f:
+            json.dump(serializable, f, indent=1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 3: cost + accuracy at alpha=0.9, all methods & variants.
+
+Main methods average 3 trials (as in the paper); ablation variants are
+single-trial.  Costs are reported as multiples of the matching 2-Model
+Cascade variant, mirroring the paper's table layout.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import ALL_WORKLOADS, fmt_table, run_variant
+
+MAIN = ["oracle_only", "model_cascade", "model_cascade_g",
+        "task_cascades", "task_cascades_g", "lite"]
+VARIANTS = ["no_surrogates", "single_iteration", "no_filtering",
+            "naive_rag", "selectivity", "restructure_top25", "rag_nosur"]
+
+PAPER_AVG = {"task_cascades": 0.59, "task_cascades_g": 0.52, "lite": 0.62,
+             "no_surrogates": 1.21, "single_iteration": 0.66,
+             "no_filtering": 1.55, "naive_rag": 0.65, "selectivity": 4.44,
+             "restructure_top25": 1.81, "rag_nosur": 1.16}
+
+
+def run(trials: int = 3, quick: bool = False):
+    workloads = ALL_WORKLOADS[:3] if quick else ALL_WORKLOADS
+    n_docs = 400 if quick else 1000
+    results = {}
+    for method in MAIN + VARIANTS:
+        per_w = {}
+        t = 1 if (method in VARIANTS or quick) else trials
+        for w in workloads:
+            accs, costs = [], []
+            for s in range(t):
+                r = run_variant(method, w, seed=s, n_docs=n_docs)
+                accs.append(r["accuracy"])
+                costs.append(r["total_cost"])
+            per_w[w] = (float(np.mean(accs)), float(np.mean(costs)))
+        results[method] = per_w
+
+    rows = []
+    for method in MAIN + VARIANTS:
+        row = [method]
+        base = "model_cascade_g" if method.endswith("_g") else "model_cascade"
+        ratios = []
+        for w in workloads:
+            acc, cost = results[method][w]
+            if method == "oracle_only":
+                row.append(f"${cost:.2f}")
+                continue
+            if method.startswith("model_cascade"):
+                row.append(f"{acc:.1%} ${cost:.2f}")
+                continue
+            ref_cost = results[base][w][1]
+            ratio = cost / max(ref_cost, 1e-9)
+            ratios.append(ratio)
+            row.append(f"{acc:.1%} {ratio:.2f}x")
+        if ratios:
+            avg = float(np.mean(ratios))
+            paper = PAPER_AVG.get(method)
+            row.append(f"{avg:.2f}x" + (f" (paper {paper:.2f}x)" if paper
+                                        else ""))
+        else:
+            row.append("-")
+        rows.append(row)
+    table = fmt_table(["method"] + list(workloads) + ["avg ratio"], rows)
+    print(table)
+    return {"table": table, "results": {
+        m: {w: results[m][w] for w in workloads} for m in results}}
+
+
+if __name__ == "__main__":
+    run()

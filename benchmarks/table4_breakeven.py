@@ -1,0 +1,64 @@
+"""Paper Table 4: optimization cost, break-even docs, total cost @ 1M docs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import OptimizationCost, break_even_docs
+from repro.core.simulation import WORKLOADS, make_workload
+
+from .common import ALL_WORKLOADS, fmt_table, run_variant
+
+
+def run(quick: bool = False):
+    workloads = ALL_WORKLOADS[:3] if quick else ALL_WORKLOADS
+    n_docs = 400 if quick else 1000
+    rows = []
+    data = {}
+    for w in workloads:
+        spec = WORKLOADS[w]
+        avg_tokens = spec.avg_words / 0.75
+        n_dev = 150 if w == "legal" else 200
+        oc_tc = OptimizationCost(n_dev, avg_tokens, spec.op_tokens,
+                                 (0.1, 0.25, 0.5, 1.0))
+        oc_lite = OptimizationCost(n_dev, avg_tokens, spec.op_tokens,
+                                   (0.1, 0.25, 0.5, 1.0), lite=True)
+        c_tc, c_lite = oc_tc.total(), oc_lite.total()
+        c_mc = oc_tc.model_cascade_cost()
+
+        r_or = run_variant("oracle_only", w, n_docs=n_docs)
+        r_mc = run_variant("model_cascade", w, n_docs=n_docs)
+        r_tc = run_variant("task_cascades", w, n_docs=n_docs)
+        r_li = run_variant("lite", w, n_docs=n_docs)
+        n_test = n_docs - 200
+        per = {k: r["total_cost"] / n_test
+               for k, r in [("or", r_or), ("mc", r_mc), ("tc", r_tc),
+                            ("li", r_li)]}
+        be = {k: break_even_docs(c, per[k], per["or"])
+              for k, c in [("tc", c_tc), ("li", c_lite), ("mc", c_mc)]}
+        m = 1_000_000
+        tot = {k: c + per[k2] * m
+               for k, c, k2 in [("tc", c_tc, "tc"), ("li", c_lite, "li"),
+                                ("mc", c_mc, "mc")]}
+        data[w] = {"opt": (c_tc, c_lite, c_mc), "break_even": be,
+                   "at_1m": tot}
+        rows.append([
+            w, f"${c_tc:.2f}", f"${c_lite:.2f}", f"${c_mc:.2f}",
+            f"{be['tc']:.0f}", f"{be['li']:.0f}", f"{be['mc']:.0f}",
+            f"${tot['tc']:.0f} ({tot['tc']/tot['mc']:.2f}x)",
+            f"${tot['li']:.0f} ({tot['li']/tot['mc']:.2f}x)",
+            f"${tot['mc']:.0f}",
+        ])
+    table = fmt_table(
+        ["workload", "opt TC", "opt Lite", "opt 2MC",
+         "break-even TC", "BE Lite", "BE 2MC",
+         "@1M TC", "@1M Lite", "@1M 2MC"], rows)
+    print(table)
+    bes = [data[w]["break_even"]["tc"] for w in workloads
+           if np.isfinite(data[w]["break_even"]["tc"])]
+    print(f"\nmean TC break-even: {np.mean(bes):.0f} docs "
+          f"(paper: 2,986)")
+    return {"table": table, "data": data}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,234 @@
+"""Distributed collectives: SP-KV decode attention, overlap helpers,
+gradient compression.
+
+``sp_decode_attention``
+    Long-context (batch=1) decode: the KV cache sequence dim is sharded over
+    the ``data`` axis.  Each shard runs a local flash-decode over its slice
+    and emits (numerator, denominator, max) in log-sum-exp form; partial
+    softmaxes are combined with two psums — the flash-decoding pattern
+    mapped onto a TPU mesh.
+
+``ring_all_gather`` / ``ring_reduce_scatter``
+    Chunked ``lax.ppermute`` rings.  XLA can overlap each permute step with
+    the caller's per-chunk compute (``matmul_ag_overlap``), which is how we
+    hide weight all-gathers behind matmuls in the ZeRO-1 optimizer path.
+
+``int8_compress`` / ``int8_decompress`` + ``compressed_psum``
+    Per-chunk int8 quantization with error feedback for the cross-pod
+    gradient all-reduce (pod links are the slowest hop in the 2x16x16 mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel (SP-KV) decode attention
+# ---------------------------------------------------------------------------
+
+def _local_decode_lse(q, k, v, kv_len, *, sm_scale, shard_offset):
+    """Local flash-decode returning log-sum-exp parts.
+
+    q: [B, H, Dh]; k/v: [B, S_local, KV, Dh]; kv_len: [B] *global* valid
+    length; shard_offset: [B] global position of this shard's first slot.
+    Returns (acc [B,H,Dh] f32 numerator, l [B,H] f32 denominator, m [B,H]).
+    """
+    B, S, KV, Dh = k.shape
+    H = q.shape[1]
+    g = H // KV
+    qf = q.astype(jnp.float32) * sm_scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kf)              # [B, H, S]
+    kpos = shard_offset[:, None] + jnp.arange(S)[None, :]  # [B, S] global pos
+    valid = (kpos < kv_len[:, None])[:, None, :]           # [B, 1, S]
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                # [B, H]
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(valid, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                                # [B, H]
+    acc = jnp.einsum("bhk,bkhd->bhd", p, vf)               # [B, H, Dh]
+    return acc, l, m
+
+
+def sp_decode_attention(
+    q: jnp.ndarray,            # [B, H, Dh] replicated over data axis
+    k: jnp.ndarray,            # [B, S, KV, Dh] seq sharded over "data"
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray,       # [B] global valid length
+    *,
+    mesh: Mesh,
+    sm_scale: float,
+    axis: str = "data",
+) -> jnp.ndarray:
+    """Flash-decoding across the mesh: seq-sharded KV, lse-combined output."""
+    S_global = k.shape[1]
+    n = mesh.shape[axis]
+    assert S_global % n == 0, (S_global, n)
+    s_local = S_global // n
+
+    def body(q, k, v, kv_len):
+        idx = jax.lax.axis_index(axis)
+        offset = jnp.full((q.shape[0],), idx * s_local, jnp.int32)
+        acc, l, m = _local_decode_lse(
+            q, k, v, kv_len, sm_scale=sm_scale, shard_offset=offset)
+        # combine partial softmaxes: global max, rescale, two psums
+        m_glob = jax.lax.pmax(m, axis)
+        m_safe = jnp.where(jnp.isneginf(m_glob), 0.0, m_glob)
+        scale = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        acc = jax.lax.psum(acc * scale[..., None], axis)
+        l = jax.lax.psum(l * scale, axis)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    tp = "model" if "model" in mesh.axis_names else None
+    pod = "pod" if "pod" in mesh.axis_names else None
+    kv_heads_sharded = tp is not None and k.shape[2] % mesh.shape.get("model", 1) == 0 \
+        and mesh.shape.get("model", 1) > 1 and k.shape[2] >= mesh.shape["model"]
+    hspec = tp if kv_heads_sharded else None
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, hspec, None),             # q replicated over seq axis
+            P(None, axis, hspec, None),       # k seq-sharded
+            P(None, axis, hspec, None),       # v
+            P(None),                          # kv_len
+        ),
+        out_specs=P(None, hspec, None),
+        check_vma=False,
+    )(q, k, v, kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Ring collectives (chunked, overlappable)
+# ---------------------------------------------------------------------------
+
+def ring_all_gather(x: jnp.ndarray, axis_name: str, *, axis: int = 0) -> jnp.ndarray:
+    """All-gather via n-1 ppermute steps (inside shard_map).
+
+    Returns the concatenation over the mesh axis along ``axis``.  Written as
+    a ring so XLA can overlap each hop with caller compute on the previously
+    received chunk.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx = jax.lax.axis_index(axis_name)
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    # chunk j in `chunks` came from rank (idx - j) mod n; roll into rank order
+    stacked = jnp.stack(chunks, axis=0)                     # [n, ...]
+    order = (idx - jnp.arange(n)) % n                       # source rank of chunk j
+    # scatter chunks to their source position
+    out = jnp.zeros_like(stacked)
+    out = out.at[order].set(stacked)
+    parts = [jax.lax.index_in_dim(out, i, 0, keepdims=False) for i in range(n)]
+    return jnp.concatenate(parts, axis=axis)
+
+
+def ring_reduce_scatter(x: jnp.ndarray, axis_name: str, *, axis: int = 0) -> jnp.ndarray:
+    """Reduce-scatter via n-1 ppermute+add steps (inside shard_map)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    assert x.shape[axis] % n == 0
+    chunk = x.shape[axis] // n
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def get_chunk(arr, j):
+        # dynamic slice of chunk j along `axis`
+        start = [0] * arr.ndim
+        sizes = list(arr.shape)
+        sizes[axis] = chunk
+        start[axis] = j * chunk
+        return jax.lax.dynamic_slice(arr, start, sizes)
+
+    # start with my successor's chunk; accumulate around the ring
+    acc = get_chunk(x, (idx + 1) % n)
+    for step in range(1, n):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        acc = acc + get_chunk(x, (idx + 1 + step) % n)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(
+    x: jnp.ndarray,
+    axis_name: str,
+    error: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-compressed all-reduce with error feedback (inside shard_map).
+
+    Compensates ``x + error`` (the residual from the previous step), reduces
+    the quantized tensor, and returns (mean-reduced value, new local error).
+    Used for the *cross-pod* gradient hop where ICI bandwidth is scarcest;
+    in-pod reduction stays full precision.
+    """
+    n = jax.lax.axis_size(axis_name)
+    xc = x.astype(jnp.float32) + (error if error is not None else 0.0)
+    q, scale = int8_compress(xc)
+    new_error = xc - int8_decompress(q, scale)
+    # all-reduce the dequantized value (int8 psum is unsupported; the wire
+    # format models 4x fewer bytes — roofline accounting uses 1 byte/elem)
+    red = jax.lax.psum(int8_decompress(q, scale), axis_name) / n
+    return red.astype(x.dtype), new_error
+
+
+# ---------------------------------------------------------------------------
+# Overlapped TP matmul (all-gather x-shards while computing)
+# ---------------------------------------------------------------------------
+
+def matmul_ag_overlap(
+    x: jnp.ndarray,             # [B, S/n, D] sequence-sharded activations
+    w: jnp.ndarray,             # [D, F_local] weight shard
+    axis_name: str,
+) -> jnp.ndarray:
+    """Compute full-sequence x @ w from seq-sharded x with a compute-overlapped
+    ring all-gather: at each of the n steps, matmul the chunk we already have
+    while the next chunk is in flight. Returns [B, S, F_local].
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x @ w
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx = jax.lax.axis_index(axis_name)
+    outs = []
+    cur = x
+    for step in range(n):
+        outs.append(cur @ w)
+        if step < n - 1:
+            cur = jax.lax.ppermute(cur, axis_name, perm)
+    stacked = jnp.stack(outs, axis=0)                      # [n, B, S/n, F]
+    order = (idx - jnp.arange(n)) % n
+    out = jnp.zeros_like(stacked)
+    out = out.at[order].set(stacked)
+    parts = [jax.lax.index_in_dim(out, i, 0, keepdims=False) for i in range(n)]
+    return jnp.concatenate(parts, axis=1)

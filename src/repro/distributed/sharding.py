@@ -1,0 +1,118 @@
+"""Sharding helpers: logical axis specs -> mesh PartitionSpecs.
+
+Modules in ``repro.models`` describe every parameter with a *logical* spec —
+a tuple of logical axis names — via their ``spec_*`` functions.  This module
+maps logical names to mesh axes:
+
+    "tp"     -> "model"            (tensor parallel)
+    "dp"     -> ("pod","data")     (batch / data parallel)
+    "ep"     -> "data"             (expert parallel, MoE a2a strategy)
+    "sp"     -> "data"             (sequence parallel for long-context KV)
+    None     -> replicated
+
+ZeRO-1 optimizer-state sharding is derived per-leaf: the first unsharded
+dimension divisible by the dp size is additionally sharded over "data".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+LOGICAL_TO_MESH = {
+    "tp": "model",
+    "ep": "data",
+    "sp": "data",
+    "dp_only": "data",
+    None: None,
+}
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], mesh: Mesh) -> P:
+    """Map a logical axis tuple to a PartitionSpec on ``mesh``."""
+    out = []
+    for ax in logical:
+        if ax == "dp":
+            axes = dp_axes(mesh)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        elif ax in LOGICAL_TO_MESH:
+            m = LOGICAL_TO_MESH[ax]
+            out.append(m if m is None or m in mesh.axis_names else None)
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*out)
+
+
+def tree_pspecs(logical_tree: Any, mesh: Mesh) -> Any:
+    """Map a pytree of logical tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda l: logical_to_pspec(l, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def tree_shardings(logical_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree_pspecs(logical_tree, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zero_pspec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard the first eligible dim over 'data'.
+
+    A dim is eligible if it is unsharded in ``pspec`` and divisible by the
+    data-axis size.  If none qualifies the spec is returned unchanged
+    (moments stay TP-sharded only).
+    """
+    if "data" not in mesh.axis_names:
+        return pspec
+    dsize = mesh.shape["data"]
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = set()
+    for s in spec:
+        if isinstance(s, tuple):
+            used.update(s)
+        elif s is not None:
+            used.add(s)
+    if "data" in used:
+        return pspec
+    for i, (dim, s) in enumerate(zip(shape, spec)):
+        if s is None and dim % dsize == 0 and dim >= dsize:
+            spec[i] = "data"
+            return P(*spec)
+    return pspec
+
+
+def zero_tree_pspecs(param_pspecs: Any, param_shapes: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda p, s: zero_pspec(p, tuple(s.shape), mesh),
+        param_pspecs,
+        param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_pspec(mesh: Mesh, *trailing: Optional[str]) -> P:
+    """PartitionSpec for [B, ...] arrays: batch over all dp axes."""
+    axes = dp_axes(mesh)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *trailing)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that is a no-op off-mesh (CPU unit tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x

@@ -1,0 +1,131 @@
+"""Flash-decoding Pallas TPU kernel: one new query token over a KV cache.
+
+Layout: q [B, Hq, Dh] (a single token per sequence); k/v [B, Hkv, S, Dh].
+For GQA we process one kv head per grid step and compute all ``g = Hq/Hkv``
+grouped query heads together, so the query tile is [g, Dh] (padded to the
+8-sublane minimum by Mosaic automatically).
+
+The kv-cache length can exceed the number of valid entries (bucketed cache
+allocation); ``kv_len`` [B] masks out unwritten slots.  ``kv_len`` rides in
+scalar-prefetch SMEM so the mask costs no extra HBM traffic.
+
+Grid = (B, Hkv, nkv) with kv innermost; f32 accumulator in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kv_len_ref,                   # SMEM [B] scalar prefetch
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    sm_scale: float,
+    block_kv: int,
+    num_kv_blocks: int,
+):
+    b = pl.program_id(0)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = kv_len_ref[b]
+    k0 = jk * block_kv
+
+    @pl.when(k0 < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [g, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [g, bkv]
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < kv_len
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(valid, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_ref[:, 0] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[:, 0] = m_cur
+
+    @pl.when(jk == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,               # [B, Hq, Dh]
+    k: jnp.ndarray,               # [B, Hkv, S, Dh]
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray,          # [B] int32
+    *,
+    sm_scale: Optional[float] = None,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0, (S, block_kv)
+    nkv = S // block_kv
+
+    # [B, Hkv, g, Dh] — grouped query heads per kv head
+    qg = q.reshape(B, Hkv, g, Dh)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        sm_scale=scale,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, j, *_: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, j, *_: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dh), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dh), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, Dh)

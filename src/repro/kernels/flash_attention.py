@@ -1,0 +1,160 @@
+"""Blocked flash attention Pallas TPU kernel with prefix-extend semantics.
+
+Supports:
+  * causal and bidirectional attention,
+  * sliding-window masking (Gemma3 / RecurrentGemma local layers),
+  * GQA (q heads grouped over kv heads),
+  * ``q_offset`` — queries are the *suffix* of a longer sequence whose first
+    ``q_offset`` tokens already live in the KV operand.  This is the task-
+    cascade primitive: extending a document from fraction f_j to f_i > f_j
+    re-uses the cached prefix KV and only computes attention for new queries.
+
+Layout: q [B, Hq, Sq, Dh]; k/v [B, Hkv, Skv, Dh] (callers transpose from
+[B, S, H, Dh]).  Grid = (B, Hq, nq, nkv) with the kv dimension innermost;
+the output block index is constant over the kv dimension, so the f32
+accumulator / running max / running denominator live in VMEM scratch across
+kv iterations (the canonical TPU "revisiting" pattern).
+
+Block shapes must tile the sequence lengths; ``ops.attention`` picks
+hardware-aligned blocks (multiples of 8 sublanes x 128 lanes; MXU-friendly
+head_dim 128/256) and asserts divisibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    acc_ref, m_ref, l_ref,        # VMEM scratch (persist across kv steps)
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    block_q: int,
+    block_kv: int,
+    num_kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this block's first query / key
+    q0 = q_offset + iq * block_q
+    k0 = ik * block_kv
+
+    # block-level pruning: skip fully-masked blocks
+    run = jnp.bool_(True)
+    if causal:
+        run &= k0 <= q0 + block_q - 1
+    if window is not None and window > 0:
+        run &= (k0 + block_kv - 1) > (q0 - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [bq, bkv]
+
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None and window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                 # [bq]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[:, 0] = m_cur
+        l_ref[:, 0] = l_cur
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,               # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,               # [B, Hkv, Skv, Dh]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    sm_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0, (Sq, block_q)
+    assert Skv % block_kv == 0, (Skv, block_kv)
+    nq = Sq // block_q
+    nkv = Skv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,233 @@
+"""Public kernel API: jit'd wrappers that dispatch between implementations.
+
+Implementations
+---------------
+``pallas``            Mosaic TPU kernel (the deploy target).
+``pallas_interpret``  same kernel body, Python interpretation (CPU tests).
+``xla``               blocked lax.scan flash attention — used for the
+                      CPU AOT dry-run (Mosaic cannot target CPU) and as the
+                      large-shape oracle.  FLOP-count matches the kernel:
+                      only causally/window-needed (q,kv) block pairs are
+                      visited (static pair list), so ``cost_analysis`` on the
+                      dry-run reflects real attention work, not a dense S^2.
+``naive``             materialized-scores reference (small shapes only).
+
+All functions take q/k/v in [B, S, H, Dh] layout (model-side convention) and
+handle the transposition to the kernel layout internally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .decode_attention import decode_attention_pallas
+from .relevance_score import relevance_score_pallas
+
+DEFAULT_IMPL = "xla"
+
+
+# ---------------------------------------------------------------------------
+# XLA blocked flash attention (static pair-list scan)
+# ---------------------------------------------------------------------------
+
+def _block_pairs(
+    nq: int, nk: int, block_q: int, block_kv: int,
+    causal: bool, window: Optional[int], q_offset: int,
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Static list of (q_block, kv_block) pairs that contain unmasked work."""
+    qi, ki = [], []
+    for i in range(nq):
+        q_lo = q_offset + i * block_q
+        q_hi = q_lo + block_q - 1
+        for j in range(nk):
+            k_lo = j * block_kv
+            k_hi = k_lo + block_kv - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and window > 0 and k_hi <= q_lo - window:
+                # fully left of every row's window in this q block
+                continue
+            qi.append(i)
+            ki.append(j)
+    return tuple(qi), tuple(ki)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "sm_scale", "block_q", "block_kv",
+    ),
+)
+def xla_flash_attention(
+    q: jnp.ndarray,               # [B, Sq, Hq, Dh]
+    k: jnp.ndarray,               # [B, Skv, Hkv, Dh]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    sm_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    qi, ki = _block_pairs(nq, nk, bq, bk, causal, window, q_offset)
+    pair_arr = jnp.stack(
+        [jnp.asarray(qi, jnp.int32), jnp.asarray(ki, jnp.int32)], axis=1
+    )
+
+    qf = q.astype(jnp.float32) * scale
+
+    acc0 = jnp.zeros((B, Sq, Hq, Dh), jnp.float32)
+    m0 = jnp.full((B, Sq, Hq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hq), jnp.float32)
+
+    def step(carry, ij):
+        acc, m, l = carry
+        i, j = ij[0], ij[1]
+        qb = jax.lax.dynamic_slice_in_dim(qf, i * bq, bq, axis=1)   # [B,bq,Hq,Dh]
+        kb = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=1)    # [B,bk,Hkv,Dh]
+        vb = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=1)
+        kb = jnp.repeat(kb.astype(jnp.float32), g, axis=2)
+        vb = jnp.repeat(vb.astype(jnp.float32), g, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qb, kb)                   # [B,bq,Hq,bk]
+
+        qpos = q_offset + i * bq + jnp.arange(bq)[:, None]
+        kpos = j * bk + jnp.arange(bk)[None, :]
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None and window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+
+        mb = jax.lax.dynamic_slice_in_dim(m, i * bq, bq, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(l, i * bq, bq, axis=1)
+        ab = jax.lax.dynamic_slice_in_dim(acc, i * bq, bq, axis=1)
+
+        m_cur = jnp.maximum(mb, jnp.max(s, axis=-1))
+        # guard: rows with no valid kv yet keep -inf; exp(-inf - -inf) -> nan
+        safe_m = jnp.where(jnp.isneginf(m_cur), 0.0, m_cur)
+        alpha = jnp.where(jnp.isneginf(mb), 0.0, jnp.exp(mb - safe_m))
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        l_cur = lb * alpha + jnp.sum(p, axis=-1)
+        a_cur = ab * alpha[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vb)
+
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_cur, i * bq, axis=1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_cur, i * bq, axis=1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_cur, i * bq, axis=1)
+        return (acc, m, l), None
+
+    (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), pair_arr)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public attention entry points
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jnp.ndarray,               # [B, Sq, Hq, Dh]
+    k: jnp.ndarray,               # [B, Skv, Hkv, Dh]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    sm_scale: Optional[float] = None,
+    impl: str = DEFAULT_IMPL,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Prefill / prefix-extend attention."""
+    if impl == "stub":
+        # near-zero-cost stand-in used by the dry-run to ATTRIBUTE HLO
+        # flops/bytes to the attention op (delta vs the real lowering);
+        # shape/dtype/grad-correct, O(B*S*H*Dh) work.
+        g = q.shape[2] // k.shape[2]
+        vm = jnp.repeat(jnp.mean(v, axis=1, keepdims=True), g, axis=2)
+        return (q * 1e-6 + vm).astype(q.dtype)
+    if impl == "naive":
+        return ref.mha_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            sm_scale=sm_scale,
+        )
+    if impl == "xla":
+        return xla_flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            sm_scale=sm_scale, block_q=block_q, block_kv=block_kv,
+        )
+    if impl in ("pallas", "pallas_interpret"):
+        qt = jnp.swapaxes(q, 1, 2)
+        kt = jnp.swapaxes(k, 1, 2)
+        vt = jnp.swapaxes(v, 1, 2)
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+            sm_scale=sm_scale, block_q=block_q, block_kv=block_kv,
+            interpret=(impl == "pallas_interpret"),
+        )
+        return jnp.swapaxes(out, 1, 2)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(
+    q: jnp.ndarray,               # [B, Hq, Dh]
+    k: jnp.ndarray,               # [B, S, Hkv, Dh]
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray,          # [B]
+    *,
+    sm_scale: Optional[float] = None,
+    impl: str = DEFAULT_IMPL,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Single-token decode attention over a (possibly padded) KV cache."""
+    if impl == "stub":
+        g = q.shape[1] // k.shape[2]
+        vm = jnp.repeat(jnp.mean(v, axis=1), g, axis=1)
+        return (q * 1e-6 + vm).astype(q.dtype)
+    if impl in ("naive", "xla"):
+        return ref.decode_reference(q, k, v, kv_len=kv_len, sm_scale=sm_scale)
+    if impl in ("pallas", "pallas_interpret"):
+        kt = jnp.swapaxes(k, 1, 2)
+        vt = jnp.swapaxes(v, 1, 2)
+        return decode_attention_pallas(
+            q, kt, vt, kv_len, sm_scale=sm_scale, block_kv=block_kv,
+            interpret=(impl == "pallas_interpret"),
+        )
+    raise ValueError(f"unknown decode impl {impl!r}")
+
+
+def relevance_score(
+    x: jnp.ndarray,               # [C, T, D]
+    lengths: jnp.ndarray,         # [C]
+    w: jnp.ndarray,               # [D]
+    b: jnp.ndarray,
+    *,
+    impl: str = DEFAULT_IMPL,
+    block_c: int = 128,
+) -> jnp.ndarray:
+    if impl in ("naive", "xla"):
+        return ref.relevance_reference(x, lengths, w, b)
+    if impl in ("pallas", "pallas_interpret"):
+        return relevance_score_pallas(
+            x, lengths, w, b, block_c=block_c,
+            interpret=(impl == "pallas_interpret"),
+        )
+    raise ValueError(f"unknown relevance impl {impl!r}")

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are deliberately naive (materialize the full score matrix, fp32
+softmax) — they define correctness for small shapes; kernels are validated
+against them with ``interpret=True`` sweeps in tests/.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jnp.ndarray,             # [B, Sq, Hq, Dh]
+    k: jnp.ndarray,             # [B, Skv, Hkv, Dh]
+    v: jnp.ndarray,             # [B, Skv, Hkv, Dh]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] valid kv length (padding mask)
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-query attention reference with prefix-extend semantics.
+
+    Query position i (0-based within q) has absolute position q_offset + i.
+    ``causal`` masks kv positions > absolute q position; ``window`` further
+    restricts to kv positions > abs_q - window.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)    # [B, Hq, Sq, Skv]
+
+    qpos = q_offset + jnp.arange(Sq)[:, None]          # [Sq, 1]
+    kpos = jnp.arange(Skv)[None, :]                    # [1, Skv]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None and window > 0:
+        mask &= kpos > qpos - window
+    mask_b = jnp.broadcast_to(mask[None, None], scores.shape)
+    if kv_len is not None:
+        valid = kpos < kv_len[:, None, None, None]     # [B,1,1,Skv]
+        mask_b = mask_b & valid
+    scores = jnp.where(mask_b, scores, -jnp.inf)
+    # rows that are fully masked produce zeros, not NaN
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def decode_reference(
+    q: jnp.ndarray,             # [B, Hq, Dh] single query token
+    k: jnp.ndarray,             # [B, Skv, Hkv, Dh]
+    v: jnp.ndarray,
+    *,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] number of valid cache slots
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    out = mha_reference(
+        q[:, None], k, v,
+        causal=False, window=None, q_offset=0,
+        kv_len=kv_len, sm_scale=sm_scale,
+    )
+    return out[:, 0]
+
+
+def relevance_reference(
+    x: jnp.ndarray,             # [C, T, D] chunk token embeddings
+    lengths: jnp.ndarray,       # [C] valid token count per chunk
+    w: jnp.ndarray,             # [D]
+    b: jnp.ndarray,             # [] bias
+) -> jnp.ndarray:
+    """sigmoid(meanpool(x) @ w + b) per chunk -> [C] relevance scores."""
+    mask = (jnp.arange(x.shape[1])[None, :] < lengths[:, None]).astype(jnp.float32)
+    summed = jnp.einsum("ctd,ct->cd", x.astype(jnp.float32), mask)
+    denom = jnp.maximum(lengths.astype(jnp.float32), 1.0)[:, None]
+    pooled = summed / denom
+    logit = pooled @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    return jax.nn.sigmoid(logit)

@@ -1,0 +1,70 @@
+"""Fused chunk relevance scoring Pallas kernel.
+
+Document restructuring (paper §4) scores every chunk of every incoming
+document with a logistic-regression head over mean-pooled chunk embeddings.
+At serving scale this runs on *every* document before the cascade, so the
+mean-pool and the score are fused: the [C, D] pooled matrix is never
+materialized in HBM — each grid step pools a tile of chunks in VMEM and
+immediately reduces it against the classifier weights.
+
+x: [C, T, D] chunk token embeddings, lengths: [C], w: [D], b: [1].
+Output: [C] sigmoid relevance scores (f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _relevance_kernel(x_ref, len_ref, w_ref, b_ref, o_ref, *, block_c: int, t: int):
+    x = x_ref[...].astype(jnp.float32)                    # [bc, T, D]
+    lengths = len_ref[...].astype(jnp.float32)            # [bc, 1]
+    w = w_ref[...].astype(jnp.float32)                    # [1, D]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (block_c, t), 1)
+    mask = (tpos < lengths.astype(jnp.int32)).astype(jnp.float32)  # [bc, T]
+    # fused: score_c = (sum_t mask*x[c,t,:] @ w) / len_c
+    xw = jax.lax.dot_general(
+        x.reshape(block_c * t, -1), w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(block_c, t)                                  # [bc, T]
+    summed = jnp.sum(xw * mask, axis=-1)                   # [bc]
+    denom = jnp.maximum(lengths[:, 0], 1.0)
+    logit = summed / denom + b_ref[0, 0]
+    o_ref[...] = jax.nn.sigmoid(logit)[:, None]
+
+
+def relevance_score_pallas(
+    x: jnp.ndarray,          # [C, T, D]
+    lengths: jnp.ndarray,    # [C]
+    w: jnp.ndarray,          # [D]
+    b: jnp.ndarray,          # [] or [1]
+    *,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    C, T, D = x.shape
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    nc = C // block_c
+
+    kernel = functools.partial(_relevance_kernel, block_c=block_c, t=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((block_c, T, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 1), jnp.float32),
+        interpret=interpret,
+    )(x, lengths.reshape(C, 1).astype(jnp.int32), w.reshape(1, D),
+      jnp.asarray(b, jnp.float32).reshape(1, 1))
+    return out[:, 0]

@@ -1,0 +1,264 @@
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE FIRST TWO LINES set up 512 placeholder host devices BEFORE any jax
+import — jax locks the device count at first init.  Everything else in the
+repo sees the real single CPU device.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--out results.json]
+
+``--all`` runs every supported cell in subprocesses (compile-crash
+isolation + parallelism) and aggregates a JSON report consumed by
+``launch/roofline.py`` and EXPERIMENTS.md §Dry-run.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+
+from ..config import SHAPES      # noqa: E402
+from ..configs import ALIASES, ARCHS, get_config   # noqa: E402
+from .mesh import make_production_mesh             # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*(\([^)]*\)|\S+)")
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+         "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+         "f8e5m2": 1, "s16": 2, "u16": 2}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+COLLECTIVE_OP_RE = re.compile(
+    r"= *(?:\([^=]*?\)|\S+)? *"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output+operand bytes of collective ops in an HLO dump, per kind.
+
+    Matches BOTH single-output (`= f32[..] all-reduce(..)`) and
+    tuple-output (`= (f32[..], ..) all-reduce(..)`) instruction forms and
+    counts every shape token on the instruction line (the HloCostAnalysis
+    operand+output convention — ~2x the wire payload for a simple AR).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = COLLECTIVE_OP_RE.search(stripped)
+        if not m or " = " not in stripped:
+            continue
+        kind = m.group(1)
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(stripped):
+            if dt not in BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def _compile_case(case, mesh):
+    """lower + compile one case; return (compiled, metrics dict)."""
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            case.fn,
+            in_shardings=case.in_shardings,
+            out_shardings=case.out_shardings,
+            donate_argnums=case.donate_argnums,
+        )
+        lowered = jitted.lower(*case.args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        # post-SPMD optimized HLO: pjit-inserted collectives are visible here
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+
+
+def run_one(arch: str, shape: str, mesh_kind: str, attn_impl: str = "xla"):
+    """Compile the production (scanned) program + R=1/R=2 unrolled probes.
+
+    XLA's HloCostAnalysis visits a while-loop body once, so the scanned
+    superblock stack under-reports FLOPs/bytes/collectives by ~R.  The two
+    unrolled probes give A = base + body and B = base + 2*body; the true
+    totals are A + (R-1)*(B-A).  The production compile (memory analysis,
+    shardings, compile success) is the deliverable; the probes only feed
+    the roofline table.
+    """
+    from .specs import build_case
+    from ..configs import get_config
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_config(arch)
+    n_dev = 1
+    for s in mesh.shape.values():
+        n_dev *= s
+
+    case = build_case(arch, shape, mesh, attn_impl)
+    main = _compile_case(case, mesh)
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": n_dev,
+        "ok": True, **main,
+    }
+
+    # cost extrapolation via unrolled probes (decoder-only archs with a
+    # scanned superblock stack; whisper is already fully unrolled)
+    if cfg.family != "audio":
+        p = len(cfg.block_pattern)
+        n_rep = cfg.num_layers // p
+        if n_rep >= 2:
+            a = _compile_case(build_case(arch, shape, mesh, attn_impl,
+                                         n_rep_override=1), mesh)
+            b = _compile_case(build_case(arch, shape, mesh, attn_impl,
+                                         n_rep_override=2), mesh)
+
+            def extrap(ka, kb):
+                return ka + (n_rep - 1) * (kb - ka)
+
+            coll = {}
+            for kind in set(a["collective_bytes"]) | set(b["collective_bytes"]):
+                coll[kind] = int(extrap(
+                    a["collective_bytes"].get(kind, 0),
+                    b["collective_bytes"].get(kind, 0)))
+            result["extrapolated"] = {
+                "flops": extrap(a["flops"], b["flops"]),
+                "bytes_accessed": extrap(a["bytes_accessed"],
+                                         b["bytes_accessed"]),
+                "collective_bytes": coll,
+                "probe_compile_s": [a["compile_s"], b["compile_s"]],
+            }
+    else:
+        result["extrapolated"] = {
+            "flops": main["flops"],
+            "bytes_accessed": main["bytes_accessed"],
+            "collective_bytes": main["collective_bytes"],
+        }
+    return result
+
+
+def supported_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in cfg.supported_shapes:
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--attn", default="xla", choices=["xla", "stub"])
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = []
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        for arch, shape in supported_cells():
+            for mk in meshes:
+                cells.append((arch, shape, mk))
+        results = run_subprocesses(cells, args.jobs, args.timeout,
+                                   attn=args.attn, partial_out=args.out)
+        ok = sum(1 for r in results if r.get("ok"))
+        print(f"\n=== dry-run: {ok}/{len(results)} cells compiled ===")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        sys.exit(0 if ok == len(results) else 1)
+
+    res = run_one(args.arch, args.shape, args.mesh, attn_impl=args.attn)
+    print(json.dumps(res, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+def run_subprocesses(cells, jobs: int, timeout: int, attn: str = "xla",
+                     partial_out: str = None):
+    """Run each cell as `python -m repro.launch.dryrun --arch ...` with
+    bounded parallelism; collect JSON results."""
+    import tempfile
+    from concurrent.futures import ThreadPoolExecutor
+
+    def run_cell(cell):
+        arch, shape, mk = cell
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+            out = tf.name
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mk,
+               "--attn", attn, "--out", out]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=timeout,
+                env={**os.environ, "PYTHONPATH": os.environ.get(
+                    "PYTHONPATH", "src")})
+            if proc.returncode == 0:
+                with open(out) as f:
+                    r = json.load(f)
+            else:
+                r = {"arch": arch, "shape": shape, "mesh": mk, "ok": False,
+                     "error": proc.stderr[-2000:]}
+        except subprocess.TimeoutExpired:
+            r = {"arch": arch, "shape": shape, "mesh": mk, "ok": False,
+                 "error": f"timeout after {timeout}s"}
+        finally:
+            if os.path.exists(out):
+                os.unlink(out)
+        status = "OK " if r.get("ok") else "FAIL"
+        print(f"[{status}] {arch:20s} {shape:12s} {mk:6s} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+        return r
+
+    results = []
+    with ThreadPoolExecutor(max_workers=jobs) as ex:
+        for r in ex.map(run_cell, cells):
+            results.append(r)
+            if partial_out:        # incremental flush (crash-resumable)
+                with open(partial_out, "w") as f:
+                    json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,349 @@
+"""The decoder-only LM: embed -> scan(superblocks) [+ tail] -> norm -> head.
+
+Covers 9 of the 10 assigned architectures (whisper-base is enc-dec; see
+``whisper.py``).  The repeating ``block_pattern`` is expanded as
+``num_layers = R * P + tail``: the R full repetitions are *stacked* (leading
+dim R per parameter leaf) and executed with ``jax.lax.scan`` — one compiled
+superblock body regardless of depth — while the tail layers run unstacked.
+
+Four entry points, one per serving/training phase:
+
+    forward(params, batch)                     -> logits [B, S, V]   (train)
+    prefill(params, batch, s_alloc)            -> (last logits, states)
+    extend(params, batch, states, q_offset)    -> (last logits, states)
+    decode_step(params, tokens, states, pos)   -> (logits [B, V], states)
+
+``extend`` is the task-cascade primitive: document fraction f_j -> f_i reuse
+(the KV prefix for [0, q_offset) is already in ``states``).
+
+VLM (qwen2-vl) inputs may carry ``patch_emb`` [B, S_img, D] — the stubbed
+vision frontend — which is prepended to the text token embeddings, and
+``positions3`` [B, S, 3] for M-RoPE.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..config import ATTN_FULL, ATTN_LOCAL, ResolvedConfig
+from ..distributed.sharding import batch_pspec, constrain
+from . import blocks
+from .layers import embed_apply, init_embed, init_rmsnorm, lm_head_apply, \
+    rmsnorm_apply, spec_embed, spec_rmsnorm
+from .runtime import Runtime
+
+
+def _stack_init(rng, n: int, init_fn):
+    """Initialize ``n`` copies of a module, stacked on the leading dim."""
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+@dataclass(frozen=True)
+class LM:
+    rcfg: ResolvedConfig
+    rt: Runtime
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.rcfg.base.block_pattern
+
+    @property
+    def n_rep(self) -> int:
+        return self.rcfg.base.num_layers // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> Tuple[str, ...]:
+        kinds = self.rcfg.base.layer_kinds()
+        return kinds[self.n_rep * len(self.pattern):]
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16 if self.rcfg.base.dtype == "bfloat16" else jnp.float32
+
+    # ---------------------------------------------------------------- params
+    def init(self, rng) -> Dict[str, Any]:
+        b = self.rcfg.base
+        k_emb, k_stage, k_tail = jax.random.split(rng, 3)
+        stages = tuple(
+            _stack_init(
+                jax.random.fold_in(k_stage, pi), self.n_rep,
+                functools.partial(
+                    blocks.init_block, rcfg=self.rcfg, kind=kind,
+                    dtype=self.dtype))
+            for pi, kind in enumerate(self.pattern))
+        tail = tuple(
+            blocks.init_block(jax.random.fold_in(k_tail, ti), self.rcfg,
+                              kind, self.dtype)
+            for ti, kind in enumerate(self.tail_kinds))
+        return {
+            "embed": init_embed(k_emb, self.rcfg.padded_vocab, b.d_model,
+                                self.dtype),
+            "final_norm": init_rmsnorm(b.d_model),
+            "stages": stages,
+            "tail": tail,
+        }
+
+    def param_specs(self) -> Dict[str, Any]:
+        stages = tuple(
+            jax.tree.map(
+                lambda t: (None,) + t,                 # leading R dim replicated
+                blocks.spec_block(self.rcfg, kind),
+                is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(a, (str, type(None))) for a in x))
+            for kind in self.pattern)
+        tail = tuple(blocks.spec_block(self.rcfg, kind)
+                     for kind in self.tail_kinds)
+        return {
+            "embed": spec_embed(),
+            "final_norm": spec_rmsnorm(),
+            "stages": stages,
+            "tail": tail,
+        }
+
+    # ---------------------------------------------------------------- states
+    def init_states(self, batch: int, s_alloc: int):
+        stages = tuple(
+            jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (self.n_rep,) + l.shape),
+                blocks.init_block_state(self.rcfg, kind, batch, s_alloc,
+                                        self.dtype))
+            for kind in self.pattern)
+        tail = tuple(
+            blocks.init_block_state(self.rcfg, kind, batch, s_alloc, self.dtype)
+            for kind in self.tail_kinds)
+        return {"stages": stages, "tail": tail}
+
+    def state_shapes(self, batch: int, s_alloc: int):
+        stages = tuple(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.n_rep,) + s.shape, s.dtype),
+                blocks.block_state_shape(self.rcfg, kind, batch, s_alloc,
+                                         self.dtype))
+            for kind in self.pattern)
+        tail = tuple(
+            blocks.block_state_shape(self.rcfg, kind, batch, s_alloc, self.dtype)
+            for kind in self.tail_kinds)
+        return {"stages": stages, "tail": tail}
+
+    def state_specs(self, *, batch_sharded: bool, seq_sharded: bool):
+        def with_lead(tree):
+            return jax.tree.map(
+                lambda t: (None,) + t, tree,
+                is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(a, (str, type(None))) for a in x))
+        stages = tuple(
+            with_lead(blocks.spec_block_state(
+                self.rcfg, kind, batch_sharded=batch_sharded,
+                seq_sharded=seq_sharded))
+            for kind in self.pattern)
+        tail = tuple(
+            blocks.spec_block_state(self.rcfg, kind,
+                                    batch_sharded=batch_sharded,
+                                    seq_sharded=seq_sharded)
+            for kind in self.tail_kinds)
+        return {"stages": stages, "tail": tail}
+
+    # ----------------------------------------------------------------- embed
+    def _dp_spec(self):
+        if self.rt.mesh is None:
+            return None
+        return batch_pspec(self.rt.mesh, None, None)
+
+    def _constrain_act(self, x):
+        if self.rt.mesh is None:
+            return x
+        mesh = self.rt.mesh
+        seq = "model" if (self.rt.sp_activations
+                          and x.shape[1] % mesh.shape["model"] == 0) else None
+        dp = batch_pspec(mesh)[0] if x.shape[0] % _dp_size(mesh) == 0 else None
+        return constrain(x, mesh, P(dp, seq, None))
+
+    def embed_inputs(self, params, batch: Dict[str, jnp.ndarray]):
+        b = self.rcfg.base
+        x = embed_apply(params["embed"], batch["tokens"]).astype(self.dtype)
+        if b.frontend_stub == "vision_patches" and "patch_emb" in batch:
+            x = jnp.concatenate(
+                [batch["patch_emb"].astype(self.dtype), x], axis=1)
+        if b.frontend_stub == "audio_frames" and "frame_emb" in batch:
+            x = jnp.concatenate(
+                [batch["frame_emb"].astype(self.dtype), x], axis=1)
+        if getattr(b, "embed_scale", False):
+            x = x * jnp.asarray(b.d_model ** 0.5, self.dtype)
+        return x
+
+    # ------------------------------------------------------------------ core
+    def _run_blocks(self, params, x, *, mode, states=None, cache_len=None,
+                    q_offset=0, positions=None, positions3=None):
+        rcfg, rt = self.rcfg, self.rt
+        dp_spec = self._dp_spec()
+        pattern = self.pattern
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def superblock(carry, xs):
+            x, aux = carry
+            stage_params, stage_states = xs
+            new_states = []
+            for pi, kind in enumerate(pattern):
+                st = None if stage_states is None else stage_states[pi]
+                x, ns, a = blocks.block_apply(
+                    stage_params[pi], x, kind=kind, rcfg=rcfg, rt=rt,
+                    mode=mode, state=st, cache_len=cache_len,
+                    q_offset=q_offset, positions=positions,
+                    positions3=positions3, dp_spec=dp_spec)
+                x = self._constrain_act(x)
+                new_states.append(ns)
+                aux = aux + a
+            return (x, aux), (tuple(new_states) if mode != "train" else 0)
+
+        if mode == "train" and rt.remat:
+            superblock = jax.checkpoint(
+                superblock,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        if self.n_rep > 0 and rt.unroll_layers:
+            # Python-loop unroll (dry-run cost-extrapolation compiles)
+            carry = (x, aux0)
+            new_list = []
+            for r in range(self.n_rep):
+                sp = jax.tree.map(lambda l: l[r], params["stages"])
+                st = (jax.tree.map(lambda l: l[r], states["stages"])
+                      if states is not None else None)
+                carry, ns = superblock(carry, (sp, st))
+                new_list.append(ns)
+            x, aux = carry
+            if states is not None:
+                new_stage_states = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *new_list)
+            else:
+                new_stage_states = ()
+        elif self.n_rep > 0:
+            st_stages = states["stages"] if states is not None else tuple(
+                None for _ in pattern)
+            if states is None:
+                # scan still needs xs leaves of leading dim R; use params only
+                (x, aux), _ = jax.lax.scan(
+                    lambda c, sp: superblock(c, (sp, None)),
+                    (x, aux0), params["stages"])
+            else:
+                (x, aux), new_stage_states = jax.lax.scan(
+                    superblock, (x, aux0), (params["stages"], st_stages))
+        else:
+            aux = aux0
+            new_stage_states = ()
+
+        new_tail = []
+        for ti, kind in enumerate(self.tail_kinds):
+            st = None if states is None else states["tail"][ti]
+            x, ns, a = blocks.block_apply(
+                params["tail"][ti], x, kind=kind, rcfg=rcfg, rt=rt,
+                mode=mode, state=st, cache_len=cache_len, q_offset=q_offset,
+                positions=positions, positions3=positions3, dp_spec=dp_spec)
+            x = self._constrain_act(x)
+            new_tail.append(ns)
+            aux = aux + a
+
+        if mode == "train":
+            return x, None, aux
+        if states is None:
+            new_stage_states = tuple(
+                None for _ in pattern) if self.n_rep else ()
+        return x, {"stages": new_stage_states, "tail": tuple(new_tail)}, aux
+
+    # ------------------------------------------------------------ entry pts
+    def forward(self, params, batch: Dict[str, jnp.ndarray]):
+        """Training/eval forward -> (logits [B, S, V], moe aux)."""
+        x = self.embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+        x, _, aux = self._run_blocks(
+            params, x, mode="train", positions=positions,
+            positions3=batch.get("positions3"))
+        x = rmsnorm_apply(params["final_norm"], x, self.rcfg.base.norm_eps)
+        logits = lm_head_apply(params["embed"], x, self.rcfg.base.logit_softcap)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, jnp.ndarray]):
+        """Mean next-token xent (+ MoE aux).  ``labels`` [B, S_total]."""
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        V = logits.shape[-1]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+        tok_ll = jnp.sum(onehot * logp, axis=-1)
+        mask = batch.get("loss_mask", jnp.ones_like(tok_ll))
+        loss = -jnp.sum(tok_ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + 0.01 * aux
+
+    def prefill(self, params, batch: Dict[str, jnp.ndarray], *,
+                s_alloc: Optional[int] = None):
+        """Full prompt pass -> (last-token logits [B, V], states)."""
+        x = self.embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+        states = self.init_states(B, s_alloc or S) if s_alloc else None
+        if states is not None:
+            # prefill writes into preallocated caches via extend at offset 0
+            x, new_states, _ = self._run_blocks(
+                params, x, mode="extend", states=states, q_offset=0,
+                positions=positions, positions3=batch.get("positions3"),
+                cache_len=jnp.zeros((B,), jnp.int32))
+        else:
+            x, new_states, _ = self._run_blocks(
+                params, x, mode="prefill", positions=positions,
+                positions3=batch.get("positions3"))
+        x = rmsnorm_apply(params["final_norm"], x[:, -1:],
+                          self.rcfg.base.norm_eps)
+        logits = lm_head_apply(params["embed"], x,
+                               self.rcfg.base.logit_softcap)[:, 0]
+        return logits, new_states
+
+    def extend(self, params, batch: Dict[str, jnp.ndarray], states,
+               q_offset: int):
+        """Cascade fraction-extension: new tokens at [q_offset, q_offset+S)."""
+        x = self.embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = q_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, new_states, _ = self._run_blocks(
+            params, x, mode="extend", states=states, q_offset=q_offset,
+            positions=positions, positions3=batch.get("positions3"),
+            cache_len=jnp.full((B,), q_offset, jnp.int32))
+        x = rmsnorm_apply(params["final_norm"], x[:, -1:],
+                          self.rcfg.base.norm_eps)
+        logits = lm_head_apply(params["embed"], x,
+                               self.rcfg.base.logit_softcap)[:, 0]
+        return logits, new_states
+
+    def decode_step(self, params, tokens: jnp.ndarray, states,
+                    pos: jnp.ndarray):
+        """One decode step. tokens [B], pos [B] -> (logits [B, V], states)."""
+        x = embed_apply(params["embed"], tokens[:, None]).astype(self.dtype)
+        if getattr(self.rcfg.base, "embed_scale", False):
+            x = x * jnp.asarray(self.rcfg.base.d_model ** 0.5, self.dtype)
+        positions = pos[:, None]
+        positions3 = None
+        if self.rcfg.base.mrope_sections is not None:
+            positions3 = jnp.broadcast_to(
+                pos[:, None, None], (pos.shape[0], 1, 3)).astype(jnp.int32)
+        x, new_states, _ = self._run_blocks(
+            params, x, mode="decode", states=states, cache_len=pos,
+            positions=positions, positions3=positions3)
+        x = rmsnorm_apply(params["final_norm"], x, self.rcfg.base.norm_eps)
+        logits = lm_head_apply(params["embed"], x,
+                               self.rcfg.base.logit_softcap)[:, 0]
+        return logits, new_states
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,310 @@
+"""Mixture-of-Experts layer: top-k router + two execution strategies.
+
+Both strategies share the same capacity-based dispatch (sort-free scatter
+into per-expert buffers, tokens over capacity dropped — standard TPU MoE):
+
+``tp_dense``  experts stay replicated on the expert dim; each expert's d_ff
+              is sharded over the ``model`` axis.  Dispatch/combine are
+              local; pjit inserts the psum for the down-projection.  Right
+              for MoEs whose full expert set fits per data shard
+              (phi3.5-moe: 16e x 4096 x 6400).
+
+``ep_a2a``    experts sharded over the ``data`` axis via an explicit
+              ``shard_map`` all-to-all pair (dispatch + return), d_ff
+              additionally sharded over ``model``.  Required for dbrx-132b
+              (16e x 6144 x 10752 would be ~16.5 GB/chip dense).
+
+FLOPs for both: 3 * B*S*topk*cf * D * F (capacity-bounded), not E x dense.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import ACTS, _dense_init
+
+
+def init_moe(rng, d: int, f: int, num_experts: int, dtype=jnp.bfloat16):
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "router": _dense_init(k0, (d, num_experts), d, jnp.float32),
+        "w1": _dense_init(k1, (num_experts, d, f), d, dtype),
+        "w3": _dense_init(k2, (num_experts, d, f), d, dtype),
+        "w2": _dense_init(k3, (num_experts, f, d), f, dtype),
+    }
+
+
+def spec_moe(strategy: str) -> Dict[str, Any]:
+    e = "ep" if strategy == "ep_a2a" else None
+    return {
+        "router": (None, None),
+        "w1": (e, None, "tp"),
+        "w3": (e, None, "tp"),
+        "w2": (e, "tp", None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared dispatch machinery
+# ---------------------------------------------------------------------------
+
+def _route(router_w, x, top_k: int):
+    """x: [T, D] -> (topk expert ids [T, K], combine weights [T, K])."""
+    logits = x.astype(jnp.float32) @ router_w              # [T, E]
+    weights, ids = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
+    weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    return ids, weights, logits
+
+
+def _dispatch_indices(ids, num_experts: int, capacity: int):
+    """Position of each (token, k) assignment within its expert buffer.
+
+    ids: [T, K] -> (pos [T, K], keep [T, K]).  Assignments beyond capacity
+    are dropped (standard capacity-factor MoE).
+    """
+    T, K = ids.shape
+    flat = ids.reshape(-1)                                  # [T*K], k-major per token
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # [T*K, E]
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - 1          # [T*K, E]
+    pos = jnp.take_along_axis(pos_in_expert, flat[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    return pos.reshape(T, K), keep.reshape(T, K)
+
+
+def _expert_ffn(w1, w3, w2, buf, act: str):
+    """buf: [E, C, D] -> [E, C, D] through per-expert SwiGLU."""
+    a = ACTS[act]
+    h = a(jnp.einsum("ecd,edf->ecf", buf, w1)) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _moe_tokens(params, x2d, *, top_k, capacity_factor, num_experts, act):
+    """Dense (per-shard-local) MoE on a flat token batch [T, D]."""
+    T, D = x2d.shape
+    capacity = max(int(T * top_k * capacity_factor / num_experts), 1)
+    # round capacity to an MXU-friendly multiple
+    capacity = ((capacity + 127) // 128) * 128 if capacity >= 128 else capacity
+    ids, weights, router_logits = _route(params["router"], x2d, top_k)
+    pos, keep = _dispatch_indices(ids, num_experts, capacity)
+
+    buf = jnp.zeros((num_experts, capacity, D), x2d.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], ids.shape)
+    buf = buf.at[
+        jnp.where(keep, ids, 0),
+        jnp.where(keep, pos, 0),
+    ].add(jnp.where(keep[..., None], x2d[tok_idx], 0))
+
+    out_buf = _expert_ffn(params["w1"], params["w3"], params["w2"], buf, act)
+
+    gathered = out_buf[
+        jnp.where(keep, ids, 0), jnp.where(keep, pos, 0)
+    ]                                                       # [T, K, D]
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                     weights).astype(x2d.dtype)
+    return out, router_logits
+
+
+def _aux_loss(router_logits, ids, num_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(router_logits, axis=-1)          # [T, E]
+    frac = jnp.mean(
+        jax.nn.one_hot(ids[:, 0], num_experts, dtype=jnp.float32), axis=0)
+    return num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Strategy: tp_dense
+# ---------------------------------------------------------------------------
+
+def moe_apply_tp_dense(params, x, *, top_k, capacity_factor, act="silu"):
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Dispatch is PER BATCH ROW (vmap over B): a flat global-token dispatch
+    buffer [E, T_global*k*cf/E, D] is unshardable by the SPMD partitioner
+    (no batch dim) and was measured replicated per chip on the 512-way
+    mesh (§Perf iteration, phi3.5-moe/train_4k/multi: +70s memory term).
+    Row-level capacity uses a mildly larger factor to compensate for the
+    finer-grained load-balance pool.
+    """
+    B, S, D = x.shape
+    E = params["w1"].shape[0]
+    row_cf = capacity_factor * 1.6
+
+    def per_row(xrow):
+        return _moe_tokens(params, xrow, top_k=top_k,
+                           capacity_factor=row_cf, num_experts=E, act=act)
+
+    out, router_logits = jax.vmap(per_row)(x)
+    ids, _, _ = _route(params["router"], x.reshape(B * S, D), top_k)
+    aux = _aux_loss(router_logits.reshape(B * S, E), ids, E)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Strategy: ep_a2a  (shard_map over data x model)
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep_a2a(params, x, *, top_k, capacity_factor, act="silu",
+                     mesh: Mesh, dp_spec):
+    """Expert-parallel MoE: experts sharded over ``data``, a2a dispatch.
+
+    x: [B, S, D] batch-sharded over dp.  Inside shard_map each data shard
+    routes its local tokens, builds the full [E, C_loc, D] buffer, and an
+    all-to-all rotates expert slabs to their owning shard.  Expert d_ff is
+    additionally sharded over ``model``; the down-projection psums over it.
+    """
+    B, S, D = x.shape
+    E = params["w1"].shape[0]
+    n_data = mesh.shape["data"]
+    assert E % n_data == 0, (E, n_data)
+    e_loc = E // n_data
+
+    def body(router_w, w1, w3, w2, xl):
+        # xl: [B_loc, S, D]; w1: [E_loc, D, F_loc]
+        b_loc = xl.shape[0]
+        t = b_loc * S
+        x2d = xl.reshape(t, D)
+        capacity = max(int(t * top_k * capacity_factor / E), 8)
+        ids, weights, router_logits = _route(router_w, x2d, top_k)
+        pos, keep = _dispatch_indices(ids, E, capacity)
+
+        buf = jnp.zeros((E, capacity, D), xl.dtype)
+        tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], ids.shape)
+        buf = buf.at[
+            jnp.where(keep, ids, 0), jnp.where(keep, pos, 0)
+        ].add(jnp.where(keep[..., None], x2d[tok_idx], 0))
+
+        # dispatch: [E, C, D] -> [n_data * e_loc, C, D] where my shard now
+        # holds slabs destined for MY experts from every source shard.
+        recv = jax.lax.all_to_all(
+            buf.reshape(n_data, e_loc, capacity, D),
+            "data", split_axis=0, concat_axis=0, tiled=False,
+        )                                                   # [n_data, e_loc, C, D]
+        recv = jnp.swapaxes(recv, 0, 1).reshape(e_loc, n_data * capacity, D)
+
+        a = ACTS[act]
+        h = a(jnp.einsum("ecd,edf->ecf", recv, w1)) * \
+            jnp.einsum("ecd,edf->ecf", recv, w3)
+        out_loc = jnp.einsum("ecf,efd->ecd", h, w2)         # partial over F
+        out_loc = jax.lax.psum(out_loc, "model")            # [e_loc, n*C, D]
+
+        # return: reverse the all-to-all
+        back = jnp.swapaxes(
+            out_loc.reshape(e_loc, n_data, capacity, D), 0, 1)  # [n, e_loc, C, D]
+        ret = jax.lax.all_to_all(
+            back, "data", split_axis=0, concat_axis=0, tiled=False,
+        )                                                   # [n, e_loc, C, D]
+        ret = ret.reshape(E, capacity, D)
+
+        gathered = ret[jnp.where(keep, ids, 0), jnp.where(keep, pos, 0)]
+        gathered = jnp.where(keep[..., None], gathered, 0.0)
+        out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                         weights).astype(xl.dtype)
+        aux = _aux_loss(router_logits, ids, E)
+        return out.reshape(b_loc, S, D), aux
+
+    pod = ("pod",) if "pod" in mesh.axis_names else ()
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),                                   # router replicated
+            P("data", None, "model"),              # w1 [E(ep), D, F(tp)]
+            P("data", None, "model"),
+            P("data", "model", None),
+            dp_spec,                               # x [B(dp), S, D]
+        ),
+        out_specs=(dp_spec, P()),
+        check_vma=False,
+    )(params["router"], params["w1"], params["w3"], params["w2"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Strategy: tp_smap  (explicit shard_map TP with combine-before-psum)
+# ---------------------------------------------------------------------------
+
+def moe_apply_tp_smap(params, x, *, top_k, capacity_factor, act="silu",
+                      mesh: Mesh, dp_spec):
+    """TP MoE with the model-axis psum placed AFTER the per-token combine.
+
+    Under plain pjit the down-projection's all-reduce lands on the
+    capacity buffer [B, E, C, D] (~6x the token count at cf=2); combining
+    expert outputs is linear, so it commutes with the reduction — psum on
+    the combined [T, D] moves ~6x fewer bytes (§Perf cell 2 follow-up,
+    measured on phi3.5 prefill_32k).  Experts stay replicated on the
+    expert dim; d_ff is sharded over ``model``.
+    """
+    B, S, D = x.shape
+    E = params["w1"].shape[0]
+    row_cf = capacity_factor * 1.6
+
+    def body(router_w, w1, w3, w2, xl):
+        b_loc = xl.shape[0]
+        a = ACTS[act]
+        t = S
+        capacity = max(int(t * top_k * row_cf / E), 8)
+
+        def per_row(xrow):
+            ids, weights, router_logits = _route(router_w, xrow, top_k)
+            pos, keep = _dispatch_indices(ids, E, capacity)
+            buf = jnp.zeros((E, capacity, D), xrow.dtype)
+            tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], ids.shape)
+            buf = buf.at[
+                jnp.where(keep, ids, 0), jnp.where(keep, pos, 0)
+            ].add(jnp.where(keep[..., None], xrow[tok_idx], 0))
+            h = a(jnp.einsum("ecd,edf->ecf", buf, w1)) * \
+                jnp.einsum("ecd,edf->ecf", buf, w3)
+            part = jnp.einsum("ecf,efd->ecd", h, w2)   # PARTIAL over f
+            gathered = part[jnp.where(keep, ids, 0),
+                            jnp.where(keep, pos, 0)]
+            gathered = jnp.where(keep[..., None], gathered, 0.0)
+            out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                             weights).astype(xrow.dtype)
+            return out, router_logits, ids
+
+        out, router_logits, ids = jax.vmap(per_row)(xl)
+        out = jax.lax.psum(out, "model")               # combined, not buffer
+        aux = _aux_loss(router_logits.reshape(b_loc * S, E),
+                        ids.reshape(b_loc * S, top_k), E)
+        aux = jax.lax.pmean(aux, "model")
+        return out, aux
+
+    pod = P() if "pod" not in mesh.axis_names else P()
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),                               # router replicated
+            P(None, None, "model"),            # w1 [E, D, F(tp)]
+            P(None, None, "model"),
+            P(None, "model", None),
+            dp_spec,                           # x [B(dp), S, D]
+        ),
+        out_specs=(dp_spec, P()),
+        check_vma=False,
+    )(params["router"], params["w1"], params["w3"], params["w2"], x)
+    return out, aux
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float,
+              strategy: str, act: str = "silu",
+              mesh: Optional[Mesh] = None, dp_spec=None):
+    if mesh is not None and "model" in mesh.axis_names:
+        if strategy == "ep_a2a" and "data" in mesh.axis_names \
+                and mesh.shape["data"] > 1:
+            return moe_apply_ep_a2a(
+                params, x, top_k=top_k, capacity_factor=capacity_factor,
+                act=act, mesh=mesh, dp_spec=dp_spec)
+        if strategy in ("tp_dense", "tp_smap") and mesh.shape["model"] > 1 \
+                and dp_spec is not None:
+            return moe_apply_tp_smap(
+                params, x, top_k=top_k, capacity_factor=capacity_factor,
+                act=act, mesh=mesh, dp_spec=dp_spec)
+    return moe_apply_tp_dense(
+        params, x, top_k=top_k, capacity_factor=capacity_factor, act=act)

@@ -1,0 +1,38 @@
+"""Runtime knobs shared across the model zoo (impl selection, meshes)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Execution-environment knobs, orthogonal to architecture configs.
+
+    attn_impl: "xla" | "pallas" | "pallas_interpret" | "naive"
+        The dry-run (CPU AOT) uses "xla" (Mosaic cannot target CPU);
+        TPU deployment uses "pallas"; CPU unit tests use "pallas_interpret"
+        or "naive".
+    sp_decode: shard the KV sequence dim over the data axis at decode time
+        (long-context, batch=1) and combine partial softmaxes.
+    sp_activations: Megatron-style sequence sharding of the residual stream
+        between blocks (training memory saver).
+    """
+
+    attn_impl: str = "xla"
+    block_q: int = 512
+    block_kv: int = 512
+    sp_decode: bool = False
+    sp_activations: bool = False
+    mesh: Optional[object] = None        # jax Mesh when running distributed
+    remat: bool = True                   # checkpoint each superblock in train
+    moe_strategy: Optional[str] = None   # override config strategy
+    # Unroll the superblock scan into a Python loop.  Used by the dry-run's
+    # R=1/R=2 cost-extrapolation compiles (XLA's HloCostAnalysis counts a
+    # while-loop body once, so scanned-layer FLOPs must be recovered from
+    # unrolled small-depth compiles).
+    unroll_layers: bool = False
+
+
+CPU_TEST = Runtime(attn_impl="naive", remat=False)
+CPU_KERNEL_TEST = Runtime(attn_impl="pallas_interpret", block_q=16, block_kv=16, remat=False)

@@ -1,0 +1,239 @@
+"""Cascade execution engine over real JAX models.
+
+This is the data-plane twin of ``core.cost_model``: the paper's API prompt
+caching becomes PHYSICAL KV-prefix reuse.  Documents ride *before*
+operations in the token stream, so
+
+  * extending a document from fraction f_j to f_i > f_j runs the model's
+    ``extend`` path over only the new suffix (cached doc-prefix KV reused);
+  * switching operations on the same model at the same fraction re-runs
+    ONLY the operation tokens against the cached document KV;
+  * the engine never merges operation tokens into the cached document
+    state (states are immutable pytrees — the op-extension's states are
+    simply dropped), exactly mirroring the doc-before-op prompt layout.
+
+Shape discipline: documents are bucketed ONCE by full-document token count
+(power-of-two buckets); within a bucket every doc pads to the bucket
+length, so each (stage, bucket) launch has a static (cached_len, new_len)
+signature — a handful of compiled shapes regardless of corpus size.  PAD
+tokens participate in attention (standard right-pad serving compromise;
+the class logits read off the final OPERATION token, which always attends
+to the true document prefix).
+
+Token accounting (new vs cached, true unpadded counts) is recorded per
+stage and converted to $ with the same rates as the analytical cost model,
+so engine costs are directly comparable to ``run_cascade`` in tests.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tasks import Cascade, TaskConfig
+from ..data.tokenizer import PAD, HashWordTokenizer, class_token
+from .scheduler import ServeStats, bucket_len, make_buckets
+
+
+def _path_key(p) -> str:
+    return str(getattr(p, "key", getattr(p, "idx", p)))
+
+
+def _leaf_batch_axis(path) -> int:
+    """Batch axis of a state leaf: scan-stacked 'stages' leaves carry the
+    repetition dim first (R, B, ...); everything else is (B, ...)."""
+    return 1 if _path_key(path[0]) == "stages" else 0
+
+
+def _stack_states(states_list):
+    flat0, treedef = jax.tree_util.tree_flatten_with_path(states_list[0])
+    flats = [jax.tree.leaves(s) for s in states_list]
+    out = []
+    for li, (path, _) in enumerate(flat0):
+        ax = _leaf_batch_axis(path)
+        out.append(jnp.stack([f[li] for f in flats], axis=ax))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _slice_states(states, i: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+    out = [jnp.take(leaf, i, axis=_leaf_batch_axis(path))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclass
+class LMBackend:
+    """A model + params behind the engine, with per-doc KV state cache."""
+
+    name: str
+    model: Any                       # models.model.LM (or compatible)
+    params: Any
+    tokenizer: HashWordTokenizer
+    rate_per_token: float = 1.0      # $ parity with the analytical model
+    cached_discount: float = 0.5
+    s_alloc: int = 4096
+    # doc_id -> (padded_cached_len, true_cached_tokens, per-doc states)
+    _cache: Dict[int, Tuple[int, int, Any]] = field(default_factory=dict)
+
+    def reset(self) -> None:
+        self._cache.clear()
+
+    def class_confidences(self, logits: jnp.ndarray, n_classes: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Softmax over the class answer tokens -> (pred, conf)."""
+        toks = [class_token(c) for c in range(n_classes)]
+        cls_logits = np.asarray(logits, np.float64)[:, toks]
+        z = cls_logits - cls_logits.max(axis=1, keepdims=True)
+        probs = np.exp(z) / np.exp(z).sum(axis=1, keepdims=True)
+        return probs.argmax(axis=1), probs.max(axis=1)
+
+    def run_stage(
+        self,
+        doc_ids: Sequence[int],
+        doc_tokens: Mapping[int, np.ndarray],
+        bucket: int,                             # padded full-doc length
+        fraction: float,
+        op_tokens: np.ndarray,
+        n_classes: int,
+    ) -> Tuple[np.ndarray, np.ndarray, int, int]:
+        """Run (op, fraction) over one bucket batch.
+
+        All docs in the batch share ``bucket``; the fraction slice is
+        ``ceil(fraction * bucket)`` tokens (right-padded with PAD), so the
+        whole batch extends from the same static offset.
+        Returns (pred [B], conf [B], new_tokens, cached_tokens) with TRUE
+        (unpadded) token counts for $ accounting.
+        """
+        B = len(doc_ids)
+        f_len = max(int(math.ceil(bucket * fraction)), 1)
+        entries = [self._cache.get(d) for d in doc_ids]
+        have_cache = all(e is not None for e in entries) and \
+            len({e[0] for e in entries if e is not None}) == 1
+        c_len = entries[0][0] if have_cache and entries[0] else 0
+        if c_len > f_len:
+            # cached prefix already covers this fraction: reuse as-is
+            states = _stack_states([e[2] for e in entries])
+            q_off = c_len
+            new_true = 0
+            cached_true = sum(min(e[1], self._true_len(doc_tokens[d],
+                                                       fraction))
+                              for e, d in zip(entries, doc_ids))
+            n_new = 0
+        else:
+            n_new = f_len - c_len
+            new_tok = np.full((B, max(n_new, 1)), PAD, np.int32)
+            new_true = 0
+            cached_true = 0
+            for i, d in enumerate(doc_ids):
+                toks = doc_tokens[d]
+                seg = toks[min(c_len, len(toks)): min(f_len, len(toks))]
+                new_tok[i, : len(seg)] = seg
+                new_true += len(seg)
+                cached_true += min(c_len, len(toks)) if have_cache else 0
+            if have_cache and c_len > 0:
+                states = _stack_states([e[2] for e in entries])
+                _, states = self.model.extend(
+                    self.params, {"tokens": jnp.asarray(new_tok)},
+                    states, q_offset=c_len)
+            else:
+                _, states = self.model.prefill(
+                    self.params, {"tokens": jnp.asarray(new_tok)},
+                    s_alloc=self.s_alloc)
+            q_off = f_len
+            for i, d in enumerate(doc_ids):
+                toks = doc_tokens[d]
+                true_cached = min(f_len, len(toks))
+                self._cache[d] = (f_len, true_cached,
+                                  _slice_states(states, i))
+
+        # operation extension (doc-state snapshot survives untouched)
+        opb = np.broadcast_to(op_tokens[None],
+                              (B, len(op_tokens))).astype(np.int32)
+        logits, _ = self.model.extend(
+            self.params, {"tokens": jnp.asarray(opb)}, states, q_offset=q_off)
+        pred, conf = self.class_confidences(logits, n_classes)
+        return pred, conf, new_true + B * len(op_tokens), cached_true
+
+    @staticmethod
+    def _true_len(toks: np.ndarray, fraction: float) -> int:
+        return max(int(math.ceil(len(toks) * fraction)), 1)
+
+
+@dataclass
+class EngineResult:
+    pred: Dict[int, int]
+    conf: Dict[int, float]
+    exit_stage: Dict[int, int]
+    cost: float
+    stats: ServeStats
+
+
+@dataclass
+class CascadeEngine:
+    """Executes a task cascade over documents with real backends."""
+
+    backends: Dict[str, LMBackend]          # "proxy"/"oracle" -> backend
+    operations: Dict[str, str]              # op id -> operation text
+    n_classes: int
+    batch_size: int = 8
+
+    def _op_tokens(self, backend: LMBackend, op_id: str) -> np.ndarray:
+        return np.asarray(
+            backend.tokenizer.encode(self.operations[op_id]), np.int32)
+
+    def run(self, cascade: Cascade, docs: Mapping[int, str],
+            oracle_model: str = "oracle") -> EngineResult:
+        """docs: doc_id -> (already reordered) document text."""
+        stats = ServeStats()
+        tok: Dict[str, Dict[int, np.ndarray]] = {m: {} for m in self.backends}
+        full_len: Dict[int, int] = {}
+        for m, be in self.backends.items():
+            be.reset()
+            for d, text in docs.items():
+                ids = np.asarray(be.tokenizer.encode(text), np.int32)
+                tok[m][d] = ids
+                full_len[d] = len(ids)
+
+        unresolved = list(docs.keys())
+        pred: Dict[int, int] = {}
+        conf: Dict[int, float] = {}
+        exit_stage: Dict[int, int] = {}
+        cost = 0.0
+
+        stages = list(cascade.tasks) + [None]        # None = oracle task
+        for si, task in enumerate(stages):
+            if not unresolved:
+                break
+            if task is None:
+                model, op_id, fraction, thr = oracle_model, "o_orig", 1.0, None
+            else:
+                model = task.config.model
+                op_id = task.config.operation
+                fraction = task.config.fraction
+                thr = task.threshold_vector(self.n_classes)
+            be = self.backends[model]
+            batches = make_buckets(unresolved, full_len, self.batch_size)
+            survivors = []
+            for blen, ids in batches:
+                p, c, new_t, cached_t = be.run_stage(
+                    ids, tok[model], blen, fraction,
+                    self._op_tokens(be, op_id), self.n_classes)
+                stats.record(si, len(ids), new_t, cached_t)
+                stats.batches += 1
+                cost += (new_t * be.rate_per_token
+                         + cached_t * be.rate_per_token * be.cached_discount)
+                for i, d in enumerate(ids):
+                    take = thr is None or c[i] >= thr[p[i]]
+                    if take:
+                        pred[d] = int(p[i])
+                        conf[d] = float(c[i])
+                        exit_stage[d] = si
+                    else:
+                        survivors.append(d)
+            unresolved = survivors
+        return EngineResult(pred, conf, exit_stage, cost, stats)

@@ -1,0 +1,78 @@
+"""Serving scheduler: bucketed batching, survivor compaction, stragglers.
+
+TPU serving wants a small set of compiled shapes.  Documents are grouped
+into power-of-two *length buckets* per cascade stage; unresolved survivors
+are compacted into full batches between stages (no ragged launches); and a
+straggler policy can migrate queued work between serving shards
+(distributed.fault.StragglerPolicy).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_len(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class Bucket:
+    seq_len: int
+    doc_ids: List[int] = field(default_factory=list)
+
+
+def make_buckets(doc_ids: Iterable[int], lengths: Dict[int, int],
+                 batch_size: int,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS
+                 ) -> List[Tuple[int, List[int]]]:
+    """Group docs by length bucket, then split into <= batch_size batches.
+
+    Returns [(bucket_seq_len, [doc_id, ...]), ...]; batches are full except
+    possibly the last per bucket (compaction).
+    """
+    by_bucket: Dict[int, List[int]] = {}
+    for d in doc_ids:
+        by_bucket.setdefault(bucket_len(lengths[d], buckets), []).append(d)
+    out = []
+    for blen in sorted(by_bucket):
+        ids = by_bucket[blen]
+        for i in range(0, len(ids), batch_size):
+            out.append((blen, ids[i: i + batch_size]))
+    return out
+
+
+@dataclass
+class ServeStats:
+    stage_docs: List[int] = field(default_factory=list)
+    stage_new_tokens: List[int] = field(default_factory=list)
+    stage_cached_tokens: List[int] = field(default_factory=list)
+    batches: int = 0
+
+    def record(self, stage: int, docs: int, new_tokens: int,
+               cached_tokens: int) -> None:
+        while len(self.stage_docs) <= stage:
+            self.stage_docs.append(0)
+            self.stage_new_tokens.append(0)
+            self.stage_cached_tokens.append(0)
+        self.stage_docs[stage] += docs
+        self.stage_new_tokens[stage] += new_tokens
+        self.stage_cached_tokens[stage] += cached_tokens
+
+    def total_new_tokens(self) -> int:
+        return sum(self.stage_new_tokens)
+
+    def total_cached_tokens(self) -> int:
+        return sum(self.stage_cached_tokens)
+
+    def cache_hit_rate(self) -> float:
+        tot = self.total_new_tokens() + self.total_cached_tokens()
+        return self.total_cached_tokens() / tot if tot else 0.0

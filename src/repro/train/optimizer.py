@@ -1,0 +1,98 @@
+"""AdamW with ZeRO-1 sharded moments, grad clipping, warmup-cosine schedule.
+
+Pure-functional (init/update), no optax dependency.  Moment tensors reuse
+each parameter's PartitionSpec plus ZeRO-1: the first unsharded dim
+divisible by the data-axis size is additionally sharded over ``data``
+(``distributed.sharding.zero_tree_pspecs``), so optimizer state adds
+~2x params / dp_size per chip instead of 2x params.
+
+Optional int8 gradient compression with error feedback for the cross-pod
+all-reduce hop rides in ``train_loop`` (the optimizer itself sees
+full-precision gradients).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: Any                    # first moments (pytree like params)
+    nu: Any                    # second moments
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(
+    cfg: OptimizerConfig,
+    params: Any,
+    grads: Any,
+    state: OptState,
+) -> Tuple[Any, OptState, dict]:
+    """One AdamW step (f32 math, params cast back to their dtype)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step.astype(jnp.float32))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step)
+        nu_hat = nu / (1 - cfg.b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        # decoupled weight decay (skip 1-d tensors: norms/biases)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_mu, new_nu), metrics

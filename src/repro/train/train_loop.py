@@ -1,0 +1,171 @@
+"""Distributed training step + driver.
+
+``make_train_step`` builds the pjit'd step for any model in the zoo:
+  * loss/grad over the global batch (microbatch gradient accumulation via
+    ``lax.scan`` when ``accum_steps > 1``);
+  * AdamW/ZeRO-1 update (moments sharded over data — see optimizer.py);
+  * optional int8+error-feedback compression of the CROSS-POD gradient hop
+    (the slowest link on the 2x16x16 mesh): in-pod reduction stays full
+    precision (psum over "data"), the pod hop moves int8.
+
+``TrainDriver`` is the fault-tolerant loop: periodic async checkpoints,
+restart-from-latest, and heartbeat/straggler hooks (distributed.fault).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (batch_pspec, tree_pspecs, tree_shardings,
+                                    zero_tree_pspecs)
+from .optimizer import OptState, OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1
+    compress_pod_grads: bool = False
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    """[B, ...] -> [n, B/n, ...] per leaf."""
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_loss_fn(model):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    mesh: Optional[Mesh],
+    tc: TrainConfig = TrainConfig(),
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With a mesh, wrap in jax.jit with in/out shardings from the model's
+    logical specs (see launch/train.py); the function itself is
+    mesh-agnostic.
+    """
+    loss_fn = make_loss_fn(model)
+
+    def grads_of(params, batch):
+        if tc.accum_steps <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        micro = _split_microbatches(batch, tc.accum_steps)
+
+        def body(carry, mb):
+            acc_loss, acc_grads = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_grads, grads)), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero), micro)
+        inv = 1.0 / tc.accum_steps
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if tc.compress_pod_grads and mesh is not None \
+                and "pod" in mesh.axis_names and mesh.shape["pod"] > 1:
+            grads = _pod_compressed_grads(grads, mesh)
+        params, opt_state, metrics = adamw_update(
+            tc.opt, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def _pod_compressed_grads(grads, mesh: Mesh):
+    """int8 + error-feedback mean-reduction across the pod axis.
+
+    XLA already psums gradients over data/model axes inside the backward
+    pass; when the batch is additionally sharded over "pod", the partial
+    sums per pod differ and must be reduced.  Under SPMD the automatic
+    reduction is part of the backward; to model the compressed wire format
+    explicitly we reduce the pod axis in a shard_map with int8 payloads.
+    Error feedback state is carried in-tensor (stateless approximation:
+    residual is re-derived per step; see DESIGN §distributed-tricks).
+    """
+    from ..distributed.collectives import compressed_psum
+
+    def reduce_leaf(g):
+        def body(gl):
+            red, _err = compressed_psum(gl, "pod")
+            return red
+        spec = P(*([None] * g.ndim))
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=spec, out_specs=spec,
+            check_vma=False)(g)
+
+    return jax.tree.map(reduce_leaf, grads)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant driver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrainDriver:
+    """Checkpointed training loop with restart + straggler hooks."""
+
+    step_fn: Callable
+    checkpointer: Any = None            # checkpoint.Checkpointer
+    ckpt_every: int = 100
+    monitor: Any = None                 # fault.HeartbeatMonitor
+    log_every: int = 10
+    log_fn: Callable[[str], None] = print
+
+    def run(self, params, opt_state, data_iter, n_steps: int,
+            start_step: int = 0):
+        """Runs n_steps; resumable via (params, opt_state, start_step)."""
+        history = []
+        t0 = time.time()
+        for step in range(start_step, n_steps):
+            batch = next(data_iter)
+            if self.monitor is not None:
+                self.monitor.beat("train", step)
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch)
+            if step % self.log_every == 0:
+                loss = float(metrics["loss"])
+                history.append((step, loss))
+                self.log_fn(f"step {step} loss {loss:.4f} "
+                            f"({time.time() - t0:.1f}s)")
+            if self.checkpointer is not None and step > 0 \
+                    and step % self.ckpt_every == 0:
+                self.checkpointer.save(
+                    step, {"params": params, "opt": opt_state})
+        if self.checkpointer is not None:
+            self.checkpointer.save(n_steps, {"params": params,
+                                             "opt": opt_state})
+            self.checkpointer.wait()
+        return params, opt_state, history
+
+    def restore_latest(self, params_like, opt_like):
+        """Restore (params, opt_state, step) from the newest checkpoint."""
+        if self.checkpointer is None:
+            return None
+        latest = self.checkpointer.latest_step()
+        if latest is None:
+            return None
+        tree = self.checkpointer.restore(
+            latest, {"params": params_like, "opt": opt_like})
+        return tree["params"], tree["opt"], latest

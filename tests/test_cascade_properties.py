@@ -1,0 +1,81 @@
+"""Hypothesis property tests for cascade-execution invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CascadeCostModel
+from repro.core.tasks import Cascade, Task, TaskConfig, TaskScores, run_cascade
+
+
+def _random_world(seed, n, k_tasks, n_classes):
+    rng = np.random.default_rng(seed)
+    oracle = rng.integers(0, n_classes, n)
+    tasks, scores = [], {}
+    for i in range(k_tasks):
+        cfg = TaskConfig("proxy" if i % 2 else "oracle", f"op{i}",
+                         float(rng.choice([0.1, 0.25, 0.5, 1.0])))
+        pred = rng.integers(0, n_classes, n)
+        conf = rng.random(n)
+        scores[cfg] = TaskScores(cfg, pred, conf)
+        thr = {c: float(rng.random()) for c in range(n_classes)}
+        tasks.append(Task(cfg, thr))
+    cm = CascadeCostModel(rng.integers(50, 2000, n),
+                          {f"op{i}": 20 for i in range(k_tasks)}
+                          | {"o_orig": 40})
+    return oracle, tasks, scores, cm
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 80),
+       k=st.integers(1, 5), c=st.integers(2, 4))
+def test_every_doc_gets_exactly_one_exit(seed, n, k, c):
+    oracle, tasks, scores, cm = _random_world(seed, n, k, c)
+    res = run_cascade(Cascade(tasks), scores, oracle, cm, c)
+    assert res.pred.shape == (n,)
+    assert np.all((res.exit_stage >= 0) & (res.exit_stage <= k))
+    # classified masks partition the non-oracle docs
+    total = sum(m.sum() for m in res.per_task_classified)
+    assert total + res.oracle_mask().sum() == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 80),
+       k=st.integers(1, 4), c=st.integers(2, 3))
+def test_exit_prediction_consistency(seed, n, k, c):
+    """A doc exiting at stage s carries exactly that task's prediction."""
+    oracle, tasks, scores, cm = _random_world(seed, n, k, c)
+    res = run_cascade(Cascade(tasks), scores, oracle, cm, c)
+    for s, task in enumerate(tasks):
+        mask = res.exit_stage == s
+        if mask.any():
+            np.testing.assert_array_equal(
+                res.pred[mask], scores[task.config].pred[mask])
+    np.testing.assert_array_equal(
+        res.pred[res.oracle_mask()], oracle[res.oracle_mask()])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 60), c=st.integers(2, 3))
+def test_raising_thresholds_is_monotone(seed, n, c):
+    """Higher thresholds never let MORE docs exit at a stage."""
+    oracle, tasks, scores, cm = _random_world(seed, n, 2, c)
+    res_lo = run_cascade(Cascade(tasks), scores, oracle, cm, c)
+    bumped = [Task(t.config, {cc: v + 0.2 for cc, v in t.thresholds.items()})
+              for t in tasks]
+    res_hi = run_cascade(Cascade(bumped), scores, oracle, cm, c)
+    assert res_hi.oracle_mask().sum() >= res_lo.oracle_mask().sum()
+    # and per-doc: anyone who reached the oracle before still does
+    assert np.all(res_hi.exit_stage >= res_lo.exit_stage)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 60), c=st.integers(2, 3))
+def test_cost_nonnegative_and_bounded_by_worstcase(seed, n, c):
+    oracle, tasks, scores, cm = _random_world(seed, n, 3, c)
+    res = run_cascade(Cascade(tasks), scores, oracle, cm, c)
+    assert np.all(res.cost >= 0)
+    # worst case: every stage + the oracle, nothing cached
+    zero = np.zeros(n, np.int64)
+    worst = sum(cm.task_cost(t.config, zero)[0] for t in tasks) \
+        + cm.task_cost(TaskConfig("oracle", "o_orig", 1.0), zero)[0]
+    assert np.all(res.cost <= worst + 1e-9)

@@ -1,0 +1,234 @@
+"""Core algorithm tests: Alg 2 thresholds, Alg 4 greedy + MSSC reduction,
+WSR estimator validity/power, Alg 3/5 guarantee, cost model properties.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assembly import (brute_force_mssc, greedy_assembly,
+                                 greedy_mssc, mssc_instance_to_scores)
+from repro.core.cost_model import CascadeCostModel, OptimizationCost, \
+    break_even_docs
+from repro.core.estimator import hoeffding_certify, wsr_certify, wsr_wealth
+from repro.core.adjust import adjust_thresholds, build_shift_lists, \
+    thresholds_at_shift
+from repro.core.tasks import (Cascade, Task, TaskConfig, TaskScores,
+                              run_cascade)
+from repro.core.thresholds import find_task_thresholds, select_class_threshold
+
+
+# ---------------------------------------------------------------- Alg 2 ----
+
+def test_select_class_threshold_meets_alpha():
+    rng = np.random.default_rng(0)
+    conf = rng.random(200)
+    correct = rng.random(200) < conf          # higher conf -> more correct
+    t = select_class_threshold(conf, correct, alpha=0.8)
+    assert t is not None
+    kept = conf >= t
+    assert correct[kept].mean() >= 0.8
+
+
+def test_select_class_threshold_is_lowest():
+    conf = np.asarray([0.2, 0.4, 0.6, 0.8, 0.9, 0.95, 0.99, 0.995])
+    correct = np.asarray([0, 0, 1, 1, 1, 1, 1, 1], bool)
+    t = select_class_threshold(conf, correct, alpha=0.9)
+    # suffix from 0.4 has acc 6/7 < .9; from 0.6 acc 6/6 = 1.0 -> t = 0.6
+    assert t == pytest.approx(0.6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(20, 300), alpha=st.floats(0.5, 0.95),
+       seed=st.integers(0, 100))
+def test_threshold_property_kept_set_accuracy(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    conf = rng.random(n)
+    correct = rng.random(n) < np.clip(conf + 0.2, 0, 1)
+    t = select_class_threshold(conf, correct, alpha)
+    if t is not None:
+        kept = conf >= t
+        assert correct[kept].mean() >= alpha
+
+
+def test_find_task_thresholds_discards_weak_tasks():
+    rng = np.random.default_rng(1)
+    n = 100
+    oracle = rng.integers(0, 2, n)
+    # random predictions, uninformative confidence -> should be discarded
+    s = TaskScores(TaskConfig("proxy", "bad", 1.0),
+                   rng.integers(0, 2, n), rng.random(n) * 0.5)
+    task = find_task_thresholds(s, oracle, 2, alpha=0.95, g=0.5)
+    assert task is None
+
+
+# ------------------------------------------------------- Alg 4 + MSSC ----
+
+def test_mssc_reduction_costs_match():
+    universe = list(range(6))
+    sets = [{0, 1, 2}, {2, 3}, {3, 4, 5}, {0, 5}]
+    tasks, scores, oracle_pred, cm = mssc_instance_to_scores(universe, sets)
+    # cascade cost of an ordering == MSSC objective of that ordering
+    order = [0, 2, 1, 3]
+    casc = Cascade([tasks[i] for i in order])
+    res = run_cascade(casc, scores, oracle_pred, cm, 2)
+    # manual MSSC objective
+    uncovered = set(universe)
+    cost = 0
+    for pos, si in enumerate(order, start=1):
+        gained = sets[si] & uncovered
+        cost += pos * len(gained)
+        uncovered -= gained
+    assert res.total_cost() == pytest.approx(cost)
+
+
+def test_greedy_mssc_within_4x_of_optimum():
+    rng = np.random.default_rng(3)
+    for trial in range(10):
+        universe = set(range(8))
+        sets = [set(rng.choice(8, size=rng.integers(1, 5), replace=False))
+                for _ in range(5)]
+        if set().union(*sets) != universe:
+            sets.append(universe - set().union(*sets) or {0})
+        _, g_cost = greedy_mssc(universe, sets)
+        opt = brute_force_mssc(universe, sets)
+        if opt > 0:
+            assert g_cost <= 4 * opt
+
+
+def test_greedy_assembly_never_exceeds_oracle_cost():
+    universe = list(range(10))
+    sets = [{0, 1, 2, 3}, {4, 5}, {6, 7, 8, 9}, {1, 9}]
+    tasks, scores, oracle_pred, cm = mssc_instance_to_scores(universe, sets)
+    casc, trace = greedy_assembly(tasks, scores, oracle_pred, cm, 2,
+                                  alpha=0.0)
+    res = run_cascade(casc, scores, oracle_pred, cm, 2)
+    oracle_only = run_cascade(Cascade([]), scores, oracle_pred, cm, 2)
+    assert res.total_cost() <= oracle_only.total_cost() + 1e-9
+
+
+# --------------------------------------------------------------- WSR ----
+
+def test_wsr_false_positive_rate_bounded():
+    """Under H0 (true acc < target) certify rate must be <= delta."""
+    rng = np.random.default_rng(4)
+    target, delta, n = 0.9, 0.25, 120
+    fp = sum(wsr_certify((rng.random(n) < 0.88).astype(float), target, delta)
+             for _ in range(300))
+    assert fp / 300 <= delta + 0.05       # small simulation slack
+
+
+def test_wsr_certifies_clearly_good_cascades():
+    rng = np.random.default_rng(5)
+    ok = sum(wsr_certify((rng.random(120) < 0.98).astype(float), 0.9, 0.25)
+             for _ in range(100))
+    assert ok / 100 >= 0.95
+
+
+def test_wsr_tighter_than_hoeffding():
+    rng = np.random.default_rng(6)
+    w = h = 0
+    for _ in range(50):
+        x = (rng.random(100) < 0.97).astype(float)
+        w += wsr_certify(x, 0.9, 0.25)
+        h += hoeffding_certify(x, 0.9, 0.25)
+    assert w > h + 10              # WSR is strictly more powerful
+    assert w >= 0.6 * 50           # and certifies most draws at n=100
+
+
+def test_wsr_wealth_nonnegative():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        x = (rng.random(50) < rng.random()).astype(float)
+        w = wsr_wealth(x, 0.9, 0.25)
+        assert np.all(w > 0)
+
+
+# ------------------------------------------------------------ Alg 3/5 ----
+
+def _toy_backend(n, seed, acc=0.93):
+    rng = np.random.default_rng(seed)
+    oracle = rng.integers(0, 2, n)
+    p_doc = np.where(rng.random(n) < 0.8, 0.99, 0.55)
+    pred = np.where(rng.random(n) < p_doc, oracle, 1 - oracle)
+    conf = np.clip(p_doc + 0.1 * rng.standard_normal(n), 0.5, 1.0)
+    cfg = TaskConfig("proxy", "o_orig", 1.0)
+    return cfg, TaskScores(cfg, pred, conf), oracle
+
+
+def test_threshold_shift_is_monotone_conservative():
+    cfg, scores, oracle = _toy_backend(200, 8)
+    task = Task(cfg, {0: 0.6, 1: 0.6})
+    casc = Cascade([task])
+    lists = build_shift_lists(casc, {cfg: scores}, 2, s_max=5)
+    prev = None
+    for s in range(6):
+        th = thresholds_at_shift(lists, s)[0]
+        if prev is not None:
+            assert th[0] >= prev[0] - 1e-12 or np.isinf(th[0])
+        prev = th
+    # s=0 is the original threshold
+    assert thresholds_at_shift(lists, 0)[0][0] == pytest.approx(0.6)
+
+
+def test_adjust_guarantee_failure_rate():
+    """Pr[final accuracy < alpha] <= delta over repeated runs."""
+    alpha, delta = 0.85, 0.25
+    failures = runs = 0
+    for seed in range(40):
+        cfg, scores, oracle = _toy_backend(300, 100 + seed)
+        n = len(oracle)
+        tr, va = np.arange(n // 2), np.arange(n // 2, n)
+        tr_scores = {cfg: TaskScores(cfg, scores.pred[tr], scores.conf[tr])}
+        va_scores = {cfg: TaskScores(cfg, scores.pred[va], scores.conf[va])}
+        cm = CascadeCostModel(np.full(len(va), 100), {"o_orig": 10})
+        task = Task(cfg, {0: 0.6, 1: 0.6})
+        res = adjust_thresholds(
+            Cascade([task]), tr_scores, va_scores, oracle[va], cm, 2,
+            alpha, delta, rng=np.random.default_rng(seed))
+        if res.cascade is None:
+            continue                      # oracle-only is always safe
+        runs += 1
+        # fresh i.i.d. "deployment" sample
+        cfg2, s2, o2 = _toy_backend(500, 5000 + seed)
+        out = run_cascade(res.cascade, {cfg: s2},
+                          o2, CascadeCostModel(np.full(500, 100),
+                                               {"o_orig": 10}), 2)
+        if out.accuracy(o2) < alpha:
+            failures += 1
+    assert runs > 10
+    assert failures / runs <= delta + 0.1
+
+
+# --------------------------------------------------------- cost model ----
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 50), f1=st.sampled_from([0.1, 0.25, 0.5, 1.0]),
+       f2=st.sampled_from([0.1, 0.25, 0.5, 1.0]), seed=st.integers(0, 20))
+def test_prefix_caching_saves(n, f1, f2, seed):
+    """Same-model two-stage cost <= sum of independent costs."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(50, 5000, n)
+    cm = CascadeCostModel(toks, {"a": 20, "b": 30, "o_orig": 60})
+    c1 = TaskConfig("proxy", "a", f1)
+    c2 = TaskConfig("proxy", "b", f2)
+    exit_all_late = np.full(n, 2)
+    chained = cm.cascade_cost([c1, c2], exit_all_late)
+    # independent (no shared cache): run each from scratch
+    zero = np.zeros(n, np.int64)
+    ind1, _ = cm.task_cost(c1, zero)
+    ind2, _ = cm.task_cost(c2, zero)
+    oracle_cfg = TaskConfig("oracle", "o_orig", 1.0)
+    ind3, _ = cm.task_cost(oracle_cfg, zero)
+    assert np.all(chained <= ind1 + ind2 + ind3 + 1e-9)
+
+
+def test_optimization_cost_formulas():
+    oc = OptimizationCost(n_dev=200, avg_doc_tokens=2000, prompt_tokens=60,
+                          fractions=(0.1, 0.25, 0.5, 1.0))
+    assert oc.c_eval() > 0 and oc.c_doc() > 0 and oc.c_agent() > 0
+    lite = OptimizationCost(n_dev=200, avg_doc_tokens=2000, prompt_tokens=60,
+                            fractions=(0.1, 0.25, 0.5, 1.0), lite=True)
+    assert lite.c_eval() < oc.c_eval()
+    assert oc.model_cascade_cost() < lite.total()
+    assert break_even_docs(10.0, 0.5, 1.0) == pytest.approx(20.0)
+    assert break_even_docs(10.0, 2.0, 1.0) == np.inf

@@ -1,0 +1,175 @@
+"""Per-arch smoke tests (reduced configs) + serve-path consistency.
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step on CPU, asserting output shapes and
+finiteness.  The cascade primitive (prefill -> extend == full prefill) is
+checked for every non-MoE arch (MoE capacity dropping is order-dependent
+by design; those assert class-level agreement instead).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import resolve
+from repro.configs import ARCHS, get_reduced
+from repro.models.model import LM
+from repro.models.runtime import CPU_TEST, Runtime
+from repro.models.whisper import WhisperModel
+
+
+def make_tiny(arch, **over):
+    cfg = get_reduced(arch, dtype="float32", **over)
+    rcfg = resolve(cfg, tp=1)
+    if cfg.family == "audio":
+        return WhisperModel(rcfg, CPU_TEST), cfg
+    return LM(rcfg, CPU_TEST), cfg
+
+
+def tiny_batch(cfg, B=2, S=24, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 9, cfg.vocab_size)}
+    s_total = S
+    if cfg.frontend_stub == "vision_patches":
+        batch["patch_emb"] = 0.02 * jax.random.normal(
+            k, (B, cfg.frontend_len, cfg.d_model))
+        s_total += cfg.frontend_len
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(s_total)[None, :, None], (B, s_total, 3)
+        ).astype(jnp.int32)
+    if cfg.frontend_stub == "audio_frames":
+        batch["frame_emb"] = 0.02 * jax.random.normal(
+            k, (B, cfg.encoder_seq_len, cfg.d_model))
+    batch["labels"] = jax.random.randint(k, (B, s_total), 9, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    model, cfg = make_tiny(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = tiny_batch(cfg)
+    logits, _ = model.forward(params, batch)
+    B, S_total = batch["labels"].shape
+    assert logits.shape[0] == B and logits.shape[1] == S_total
+    assert logits.shape[2] >= cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if a not in ("whisper_base", "qwen2_vl_2b")])
+def test_prefill_extend_matches_full(arch):
+    model, cfg = make_tiny(arch)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 9,
+                              cfg.vocab_size)
+    full_logits, _ = model.prefill(params, {"tokens": toks}, s_alloc=S + 8)
+    half = S // 2
+    _, st = model.prefill(params, {"tokens": toks[:, :half]}, s_alloc=S + 8)
+    ext_logits, _ = model.extend(params, {"tokens": toks[:, half:]}, st,
+                                 q_offset=half)
+    if cfg.moe is not None:
+        # capacity-dropping is batch-order dependent; require argmax match
+        assert int(jnp.sum(jnp.argmax(full_logits, -1)
+                           != jnp.argmax(ext_logits, -1))) <= B // 2
+    else:
+        np.testing.assert_allclose(np.asarray(ext_logits),
+                                   np.asarray(full_logits),
+                                   atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_runs(arch):
+    model, cfg = make_tiny(arch)
+    params = model.init(jax.random.PRNGKey(3))
+    B, S = 2, 16
+    batch = tiny_batch(cfg, B=B, S=S)
+    batch.pop("labels")
+    if cfg.family == "audio":
+        logits, st = model.prefill(params, batch, s_alloc=S + 4)
+    else:
+        if "positions3" in batch:
+            batch.pop("positions3")
+            batch.pop("patch_emb")
+        logits, st = model.prefill(params, {"tokens": batch["tokens"]},
+                                   s_alloc=S + 4)
+    nxt = jnp.argmax(logits, -1)
+    logits2, st2 = model.decode_step(params, nxt, st,
+                                     jnp.full((B,), S, jnp.int32))
+    assert logits2.shape == logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_decode_matches_teacher_forcing_dense():
+    """Greedy decode logits == teacher-forced forward logits (llama)."""
+    model, cfg = make_tiny("llama3_2_1b", num_layers=2)
+    params = model.init(jax.random.PRNGKey(4))
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + 1), 9,
+                              cfg.vocab_size)
+    flog, _ = model.forward(params, {"tokens": toks})
+    plog, st = model.prefill(params, {"tokens": toks[:, :S]}, s_alloc=S + 4)
+    np.testing.assert_allclose(np.asarray(plog), np.asarray(flog[:, S - 1]),
+                               atol=2e-5, rtol=1e-4)
+    dlog, _ = model.decode_step(params, toks[:, S], st,
+                                jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dlog), np.asarray(flog[:, S]),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_sliding_window_ring_cache_decode():
+    """Local-attention ring cache decode == full-cache reference (gemma3)."""
+    model, cfg = make_tiny("gemma3_27b", num_layers=6, sliding_window=8)
+    params = model.init(jax.random.PRNGKey(6))
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S + 1), 9,
+                              cfg.vocab_size)
+    flog, _ = model.forward(params, {"tokens": toks})
+    _, st = model.prefill(params, {"tokens": toks[:, :S]}, s_alloc=S + 4)
+    dlog, _ = model.decode_step(params, toks[:, S], st,
+                                jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dlog), np.asarray(flog[:, S]),
+                               atol=3e-5, rtol=1e-3)
+
+
+def test_mlstm_chunkwise_matches_recurrent():
+    from repro.models import ssm
+    B, T, H, dh = 2, 32, 2, 8
+    key = jax.random.PRNGKey(8)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    li = jax.random.normal(ks[3], (B, T, H))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)) + 1.0)
+    state = ssm.init_mlstm_state(B, H, dh)
+    h_seq, st_seq = ssm.mlstm_recurrent_ref(q, k, v, li, lf, state)
+    h_chk, st_chk = ssm.mlstm_chunk(q, k, v, li, lf, state, chunk=8)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_chk["C"]),
+                               np.asarray(st_seq["C"]), atol=1e-4, rtol=1e-3)
+
+
+def test_rglru_scan_matches_step_by_step():
+    from repro.models import ssm
+    d, dr, B, T = 16, 16, 2, 12
+    p = ssm.init_rglru(jax.random.PRNGKey(9), d, dr, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(10), (B, T, d))
+    y_full, st_full = ssm.rglru_apply(p, x)
+    st = None
+    ys = []
+    for t in range(T):
+        y, st = ssm.rglru_apply(p, x[:, t:t + 1], state=st, mode="step")
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_full["h"]),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,20 @@
+"""Multi-device semantics, run in a subprocess with 8 forced host devices
+(the main pytest process keeps the single real CPU device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.slow
+def test_multidevice_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidevice_checks.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ALL_MULTIDEVICE_OK" in proc.stdout, proc.stdout

@@ -1,0 +1,93 @@
+"""End-to-end construction pipeline tests on the calibrated simulator."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (BuildConfig, build_task_cascade,
+                                 evaluate_on, model_cascade,
+                                 restructure_top25)
+from repro.core.simulation import WORKLOADS, make_workload
+
+
+@pytest.fixture(scope="module")
+def enron():
+    w = make_workload("enron", 600)
+    return w.subset(np.arange(200)), w.subset(np.arange(200, 600))
+
+
+def test_simulation_is_deterministic():
+    w1 = make_workload("court", 100)
+    w2 = make_workload("court", 100)
+    from repro.core.tasks import TaskConfig
+    c = TaskConfig("proxy", "o_orig", 0.5)
+    s1, s2 = w1.eval_config(c), w2.eval_config(c)
+    np.testing.assert_array_equal(s1.pred, s2.pred)
+    np.testing.assert_array_equal(s1.conf, s2.conf)
+    np.testing.assert_array_equal(w1.oracle_pred, w2.oracle_pred)
+
+
+def test_task_cascade_beats_model_cascade_on_enron(enron):
+    dev, test = enron
+    r_mc = evaluate_on(test, model_cascade(dev, 0.9))
+    r_tc = evaluate_on(test, build_task_cascade(dev, BuildConfig(seed=0)))
+    assert r_tc["total_cost"] < r_mc["total_cost"]
+    assert r_tc["accuracy"] >= 0.9 - 0.03
+
+
+def test_oracle_only_is_most_expensive(enron):
+    dev, test = enron
+    r_tc = evaluate_on(test, build_task_cascade(dev, BuildConfig(seed=0)))
+    assert r_tc["total_cost"] < r_tc["oracle_cost"]
+
+
+def test_guarantee_variant_meets_target(enron):
+    dev, test = enron
+    out = build_task_cascade(dev, BuildConfig(guarantee=True, seed=0))
+    r = evaluate_on(test, out)
+    assert r["accuracy"] >= 0.9 - 0.02   # delta=0.25 single draw; small slack
+
+
+def test_lite_variant_cheaper_optimization():
+    """Lite: proxy-only surrogate candidates -> fewer configs evaluated."""
+    w = make_workload("court", 300)
+    dev = w.subset(np.arange(150))
+    full = build_task_cascade(dev, BuildConfig(seed=1))
+    w2 = make_workload("court", 300)
+    dev2 = w2.subset(np.arange(150))
+    lite = build_task_cascade(dev2, BuildConfig(seed=1, lite=True))
+    n_oracle_full = sum(1 for c in full.candidate_configs
+                        if c.model == "oracle" and c.operation != "o_orig")
+    n_oracle_lite = sum(1 for c in lite.candidate_configs
+                        if c.model == "oracle" and c.operation != "o_orig")
+    assert n_oracle_lite == 0 and n_oracle_full > 0
+
+
+def test_no_surrogates_variant_only_uses_o_orig():
+    w = make_workload("legal", 300)
+    dev = w.subset(np.arange(150))
+    out = build_task_cascade(dev, BuildConfig(use_surrogates=False, seed=0))
+    assert all(t.config.operation == "o_orig" for t in out.cascade.tasks)
+
+
+def test_no_filtering_variant_full_docs_only():
+    w = make_workload("legal", 300, reorder_mode="none")
+    dev = w.subset(np.arange(150))
+    out = build_task_cascade(dev, BuildConfig(fractions=(1.0,), seed=0))
+    assert all(t.config.fraction == 1.0 for t in out.cascade.tasks)
+
+
+def test_restructure_top25_is_two_stage(enron):
+    dev, test = enron
+    out = restructure_top25(dev, 0.9)
+    assert len(out.cascade.tasks) <= 1
+    r = evaluate_on(test, out)
+    assert r["total_cost"] > 0
+
+
+def test_every_workload_builds():
+    for name in WORKLOADS:
+        w = make_workload(name, 240)
+        dev = w.subset(np.arange(120))
+        out = build_task_cascade(dev, BuildConfig(n_a=1, n_s=3, seed=0))
+        r = evaluate_on(w.subset(np.arange(120, 240)), out)
+        assert r["accuracy"] > 0.5
+        assert np.isfinite(r["total_cost"])

@@ -1,0 +1,117 @@
+"""Serving engine: prefix reuse, exits, cost parity, scheduler buckets."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import resolve
+from repro.configs import get_reduced
+from repro.core.tasks import Cascade, Task, TaskConfig
+from repro.data.documents import generate_corpus
+from repro.data.tokenizer import HashWordTokenizer
+from repro.models.model import LM
+from repro.models.runtime import CPU_TEST
+from repro.serving.engine import CascadeEngine, LMBackend
+from repro.serving.scheduler import ServeStats, bucket_len, make_buckets
+
+
+@pytest.fixture(scope="module")
+def engine():
+    tokz = HashWordTokenizer(vocab_size=512)
+
+    def mk(name, seed):
+        cfg = get_reduced("llama3_2_1b", dtype="float32", vocab_size=512,
+                          num_layers=2)
+        rcfg = resolve(cfg, tp=1)
+        m = LM(rcfg, CPU_TEST)
+        return LMBackend(
+            name=name, model=m, params=m.init(jax.random.PRNGKey(seed)),
+            tokenizer=tokz,
+            rate_per_token=1.0 if name == "oracle" else 0.06, s_alloc=512)
+
+    backends = {"proxy": mk("proxy", 1), "oracle": mk("oracle", 2)}
+    ops = {"o_orig": "does this overturn a lower court decision",
+           "sur_1": "is a lower court mentioned"}
+    return CascadeEngine(backends, ops, n_classes=2, batch_size=4)
+
+
+@pytest.fixture(scope="module")
+def docs():
+    return {d.doc_id: d.text
+            for d in generate_corpus(10, avg_lines=10, seed=7)}
+
+
+def test_engine_resolves_every_doc(engine, docs):
+    cascade = Cascade([
+        Task(TaskConfig("proxy", "sur_1", 0.25), {0: 0.7, 1: 0.7}),
+        Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.7, 1: 0.7}),
+    ])
+    res = engine.run(cascade, docs)
+    assert set(res.pred) == set(docs)
+    assert all(0 <= s <= 2 for s in res.exit_stage.values())
+    assert res.cost > 0
+
+
+def test_engine_prefix_reuse_reduces_cost(engine, docs):
+    """fraction ladder 0.25 -> 1.0 on the same model must hit the cache."""
+    thr = {0: 2.0, 1: 2.0}     # impossible thresholds: nothing exits early
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+    res = engine.run(ladder, docs)
+    assert res.stats.cache_hit_rate() > 0.05
+    # cached tokens ~= the 0.25 prefix re-read at stage 2
+    assert res.stats.stage_cached_tokens[1] > 0
+
+
+def test_engine_extension_equals_fresh(engine, docs):
+    """Same doc, fraction 0.25 then 1.0 == fresh 1.0 (logit-exact)."""
+    be = engine.backends["proxy"]
+    be.reset()
+    d0 = next(iter(docs))
+    toks = {d0: np.asarray(be.tokenizer.encode(docs[d0]), np.int32)}
+    blen = bucket_len(len(toks[d0]))
+    op = np.asarray(be.tokenizer.encode("test op"), np.int32)
+    be.run_stage([d0], toks, blen, 0.25, op, 2)
+    _, c_ext, *_ = be.run_stage([d0], toks, blen, 1.0, op, 2)
+    be.reset()
+    _, c_fresh, *_ = be.run_stage([d0], toks, blen, 1.0, op, 2)
+    np.testing.assert_allclose(c_ext, c_fresh, atol=1e-5)
+
+
+def test_engine_smaller_fraction_reuses_larger_cache(engine, docs):
+    """After f=1.0 is cached, f=0.5 must be fully cached (no new doc toks)."""
+    be = engine.backends["proxy"]
+    be.reset()
+    d0 = next(iter(docs))
+    toks = {d0: np.asarray(be.tokenizer.encode(docs[d0]), np.int32)}
+    blen = bucket_len(len(toks[d0]))
+    op = np.asarray(be.tokenizer.encode("op"), np.int32)
+    be.run_stage([d0], toks, blen, 1.0, op, 2)
+    _, _, new_t, cached_t = be.run_stage([d0], toks, blen, 0.5, op, 2)
+    assert new_t == len(op)            # only operation tokens are new
+    assert cached_t > 0
+
+
+def test_bucketing():
+    assert bucket_len(10) == 32
+    assert bucket_len(33) == 64
+    lengths = {i: l for i, l in enumerate([10, 20, 40, 50, 60, 500])}
+    batches = make_buckets(range(6), lengths, batch_size=2)
+    sizes = [blen for blen, _ in batches]
+    assert sizes == sorted(sizes)
+    all_ids = [d for _, ids in batches for d in ids]
+    assert sorted(all_ids) == list(range(6))
+    assert all(len(ids) <= 2 for _, ids in batches)
+
+
+def test_serve_stats_accounting():
+    s = ServeStats()
+    s.record(0, 4, 100, 0)
+    s.record(1, 2, 50, 30)
+    assert s.total_new_tokens() == 150
+    assert s.total_cached_tokens() == 30
+    assert 0 < s.cache_hit_rate() < 1
