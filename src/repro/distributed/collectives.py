@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels import ops
+from .compat import axis_size, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +94,7 @@ def sp_decode_attention(
     kv_heads_sharded = tp is not None and k.shape[2] % mesh.shape.get("model", 1) == 0 \
         and mesh.shape.get("model", 1) > 1 and k.shape[2] >= mesh.shape["model"]
     hspec = tp if kv_heads_sharded else None
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -103,7 +104,6 @@ def sp_decode_attention(
             P(None),                          # kv_len
         ),
         out_specs=P(None, hspec, None),
-        check_vma=False,
     )(q, k, v, kv_len)
 
 
@@ -118,7 +118,7 @@ def ring_all_gather(x: jnp.ndarray, axis_name: str, *, axis: int = 0) -> jnp.nda
     a ring so XLA can overlap each hop with caller compute on the previously
     received chunk.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -140,7 +140,7 @@ def ring_all_gather(x: jnp.ndarray, axis_name: str, *, axis: int = 0) -> jnp.nda
 
 def ring_reduce_scatter(x: jnp.ndarray, axis_name: str, *, axis: int = 0) -> jnp.ndarray:
     """Reduce-scatter via n-1 ppermute+add steps (inside shard_map)."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     assert x.shape[axis] % n == 0
@@ -192,7 +192,7 @@ def compressed_psum(
     Used for the *cross-pod* gradient hop where ICI bandwidth is scarcest;
     in-pod reduction stays full precision.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     xc = x.astype(jnp.float32) + (error if error is not None else 0.0)
     q, scale = int8_compress(xc)
     new_error = xc - int8_decompress(q, scale)
@@ -215,7 +215,7 @@ def matmul_ag_overlap(
     ring all-gather: at each of the n steps, matmul the chunk we already have
     while the next chunk is in flight. Returns [B, S, F_local].
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x @ w
     perm = [(i, (i + 1) % n) for i in range(n)]

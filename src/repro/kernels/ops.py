@@ -205,6 +205,16 @@ def decode_attention(
     if impl in ("naive", "xla"):
         return ref.decode_reference(q, k, v, kv_len=kv_len, sm_scale=sm_scale)
     if impl in ("pallas", "pallas_interpret"):
+        # Arena allocations round sequence length to the serving bucket plus
+        # an operation-suffix reserve, which need not divide block_kv.  Pad
+        # the cache axis up to a block multiple here: padded slots sit past
+        # every ``kv_len`` so the kernel's scalar-prefetch mask skips them.
+        S = k.shape[1]
+        bk = min(block_kv, S)
+        if S % bk:
+            pad = bk - S % bk
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kt = jnp.swapaxes(k, 1, 2)
         vt = jnp.swapaxes(v, 1, 2)
         return decode_attention_pallas(
@@ -212,6 +222,32 @@ def decode_attention(
             interpret=(impl == "pallas_interpret"),
         )
     raise ValueError(f"unknown decode impl {impl!r}")
+
+
+def arena_decode_attention(
+    q: jnp.ndarray,               # [B, Hq, Dh]
+    k_arena: jnp.ndarray,         # [N_slots, S, Hkv, Dh] persistent arena
+    v_arena: jnp.ndarray,
+    slots: jnp.ndarray,           # [B] int32 arena slot per sequence
+    kv_len: jnp.ndarray,          # [B] valid cache entries per sequence
+    *,
+    sm_scale: Optional[float] = None,
+    impl: str = DEFAULT_IMPL,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Decode attention reading straight from a slot arena.
+
+    The serving engine keeps one preallocated KV arena per length bucket
+    and addresses sequences by slot id; this wrapper is the kernel-side
+    contract for that layout — today it gathers the addressed rows and
+    dispatches to ``decode_attention``, so a future in-kernel paged lookup
+    (slot indices in scalar-prefetch SMEM) can slot in without touching
+    callers.
+    """
+    k = jnp.take(k_arena, slots, axis=0)
+    v = jnp.take(v_arena, slots, axis=0)
+    return decode_attention(q, k, v, kv_len, sm_scale=sm_scale, impl=impl,
+                            block_kv=block_kv)
 
 
 def relevance_score(

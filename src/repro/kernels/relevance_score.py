@@ -49,8 +49,16 @@ def relevance_score_pallas(
 ) -> jnp.ndarray:
     C, T, D = x.shape
     block_c = min(block_c, C)
-    assert C % block_c == 0, (C, block_c)
-    nc = C // block_c
+    # Ragged chunk counts (real corpora rarely land on a block multiple):
+    # pad the chunk axis with zero-length chunks and slice them back off.
+    # Padded rows score sigmoid(b) but are masked out of the pool (length 0)
+    # and dropped below, so they never reach callers.
+    c_pad = (-C) % block_c
+    if c_pad:
+        x = jnp.pad(x, ((0, c_pad), (0, 0), (0, 0)))
+        lengths = jnp.pad(lengths, (0, c_pad))
+    c_full = C + c_pad
+    nc = c_full // block_c
 
     kernel = functools.partial(_relevance_kernel, block_c=block_c, t=T)
     out = pl.pallas_call(
@@ -63,8 +71,8 @@ def relevance_score_pallas(
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((C, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((c_full, 1), jnp.float32),
         interpret=interpret,
-    )(x, lengths.reshape(C, 1).astype(jnp.int32), w.reshape(1, D),
+    )(x, lengths.reshape(c_full, 1).astype(jnp.int32), w.reshape(1, D),
       jnp.asarray(b, jnp.float32).reshape(1, 1))
-    return out[:, 0]
+    return out[:C, 0]

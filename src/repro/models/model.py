@@ -131,6 +131,41 @@ class LM:
             for kind in self.tail_kinds)
         return {"stages": stages, "tail": tail}
 
+    # ------------------------------------------------------- arena state API
+    # State pytrees are batched per sequence; the batch axis is 0 for every
+    # leaf except scan-stacked "stages" leaves, which carry the repetition
+    # dim first (R, B, ...).  ``take_states``/``put_states`` gather/scatter
+    # sub-batches along that axis, which is how the serving engine's slot
+    # arena packs survivors without per-document Python loops.
+
+    @staticmethod
+    def _state_batch_axis(path) -> int:
+        key = str(getattr(path[0], "key", getattr(path[0], "idx", path[0])))
+        return 1 if key == "stages" else 0
+
+    def take_states(self, states, idx: jnp.ndarray):
+        """Gather per-sequence states at ``idx`` [B'] -> batch-B' pytree."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+        out = [jnp.take(leaf, idx, axis=self._state_batch_axis(path))
+               for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def put_states(self, arena, idx: jnp.ndarray, states):
+        """Scatter a batch-B' state pytree into arena slots ``idx``.
+
+        Duplicate slot ids are permitted (used for scratch-slot padding);
+        which duplicate wins is unspecified.
+        """
+        flat_a, treedef = jax.tree_util.tree_flatten_with_path(arena)
+        flat_s = jax.tree.leaves(states)
+        out = []
+        for (path, leaf), sub in zip(flat_a, flat_s):
+            if self._state_batch_axis(path) == 0:
+                out.append(leaf.at[idx].set(sub.astype(leaf.dtype)))
+            else:
+                out.append(leaf.at[:, idx].set(sub.astype(leaf.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def state_specs(self, *, batch_sharded: bool, seq_sharded: bool):
         def with_lead(tree):
             return jax.tree.map(

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..distributed.compat import shard_map
 from .layers import ACTS, _dense_init
 
 
@@ -209,7 +210,7 @@ def moe_apply_ep_a2a(params, x, *, top_k, capacity_factor, act="silu",
         return out.reshape(b_loc, S, D), aux
 
     pod = ("pod",) if "pod" in mesh.axis_names else ()
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -220,7 +221,6 @@ def moe_apply_ep_a2a(params, x, *, top_k, capacity_factor, act="silu",
             dp_spec,                               # x [B(dp), S, D]
         ),
         out_specs=(dp_spec, P()),
-        check_vma=False,
     )(params["router"], params["w1"], params["w3"], params["w2"], x)
     return out, aux
 
@@ -276,7 +276,7 @@ def moe_apply_tp_smap(params, x, *, top_k, capacity_factor, act="silu",
         return out, aux
 
     pod = P() if "pod" not in mesh.axis_names else P()
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -287,7 +287,6 @@ def moe_apply_tp_smap(params, x, *, top_k, capacity_factor, act="silu",
             dp_spec,                           # x [B(dp), S, D]
         ),
         out_specs=(dp_spec, P()),
-        check_vma=False,
     )(params["router"], params["w1"], params["w3"], params["w2"], x)
     return out, aux
 

@@ -1,0 +1,98 @@
+"""Persistent slot-based KV arena for the cascade serving engine.
+
+One ``BucketArena`` per (backend, length bucket): a batched state pytree of
+shape ``[n_slots + 1, ..., s_alloc, ...]`` preallocated on device.  Each
+live document owns one slot for its lifetime (``scheduler.SlotAllocator``);
+the last row is a *scratch slot* used to pad partial batches up to the
+static launch width, so every launch gathers/scatters exactly ``B`` rows
+and scatter writes from padding land harmlessly in scratch.
+
+Slot lifecycle
+--------------
+  alloc   first time a document's bucket is touched by any stage;
+  fill    ``extend`` writes the fraction slice [cached_len, f_len) into the
+          slot (cached_len == 0 is prefill-into-arena);
+  reuse   later stages gather the slot, extend the suffix, scatter back —
+          operation suffixes are decoded against a *gathered copy* and
+          dropped, so the document prefix in the arena stays pristine;
+  free    the document exits the cascade; the slot returns to the free
+          list and may be re-issued to a new document (streaming).
+
+The arena grows by doubling (device-side zero-pad concat) when a bucket's
+live set exceeds capacity; growth preserves slot contents, so it is safe
+mid-cascade.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _grow_leaf(leaf: jnp.ndarray, axis: int, extra: int) -> jnp.ndarray:
+    pad_shape = list(leaf.shape)
+    pad_shape[axis] = extra
+    return jnp.concatenate([leaf, jnp.zeros(pad_shape, leaf.dtype)],
+                           axis=axis)
+
+
+@dataclass
+class BucketArena:
+    """Preallocated per-bucket KV/state arena plus host-side slot metadata."""
+
+    model: Any                     # models.model.LM (or compatible)
+    bucket: int                    # padded full-document length
+    s_alloc: int                   # per-slot sequence allocation
+    capacity: int                  # usable slots (scratch row excluded)
+    states: Any = None             # pytree, batch dim = capacity + 1
+    # host metadata, indexed by slot
+    cached_len: np.ndarray = field(default=None)   # padded cached prefix
+    true_len: np.ndarray = field(default=None)     # true cached doc tokens
+
+    def __post_init__(self) -> None:
+        if self.states is None:
+            self.states = self.model.init_states(self.capacity + 1,
+                                                 self.s_alloc)
+        if self.cached_len is None:
+            self.cached_len = np.zeros(self.capacity, np.int64)
+        if self.true_len is None:
+            self.true_len = np.zeros(self.capacity, np.int64)
+
+    @property
+    def scratch_slot(self) -> int:
+        return self.capacity
+
+    def ensure_capacity(self, n_slots: int) -> None:
+        """Grow (doubling) until at least ``n_slots`` usable slots exist."""
+        if n_slots <= self.capacity:
+            return
+        new_cap = max(self.capacity, 1)
+        while new_cap < n_slots:
+            new_cap *= 2
+        extra = new_cap - self.capacity
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.states)
+        grown = [_grow_leaf(leaf, self.model._state_batch_axis(path), extra)
+                 for path, leaf in flat]
+        self.states = jax.tree_util.tree_unflatten(treedef, grown)
+        self.cached_len = np.concatenate(
+            [self.cached_len, np.zeros(extra, np.int64)])
+        self.true_len = np.concatenate(
+            [self.true_len, np.zeros(extra, np.int64)])
+        self.capacity = new_cap
+
+    def clear_slot(self, slot: int) -> None:
+        """Reset metadata when a slot is re-issued to a new document.
+
+        Device state is NOT zeroed: the new document's prefill overwrites
+        [0, f_len) and every read is masked by per-slot valid lengths, so
+        stale KV past the new prefix is never visible.
+        """
+        self.cached_len[slot] = 0
+        self.true_len[slot] = 0
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.states))

@@ -1,4 +1,4 @@
-"""Cascade execution engine over real JAX models.
+"""Cascade execution engine over real JAX models (slot-arena data plane).
 
 This is the data-plane twin of ``core.cost_model``: the paper's API prompt
 caching becomes PHYSICAL KV-prefix reuse.  Documents ride *before*
@@ -9,24 +9,41 @@ operations in the token stream, so
   * switching operations on the same model at the same fraction re-runs
     ONLY the operation tokens against the cached document KV;
   * the engine never merges operation tokens into the cached document
-    state (states are immutable pytrees — the op-extension's states are
-    simply dropped), exactly mirroring the doc-before-op prompt layout.
+    state (op suffixes decode against a gathered *copy* of the slot states
+    and are dropped), exactly mirroring the doc-before-op prompt layout.
 
-Shape discipline: documents are bucketed ONCE by full-document token count
-(power-of-two buckets); within a bucket every doc pads to the bucket
-length, so each (stage, bucket) launch has a static (cached_len, new_len)
-signature — a handful of compiled shapes regardless of corpus size.  PAD
-tokens participate in attention (standard right-pad serving compromise;
-the class logits read off the final OPERATION token, which always attends
-to the true document prefix).
+Arena layout & slot lifecycle
+-----------------------------
+Per (backend, length bucket) the engine keeps one persistent
+``arena.BucketArena``: a batched state pytree ``[n_slots + 1, ...,
+s_alloc, ...]`` (s_alloc = bucket + operation reserve; the extra row is
+scratch for batch padding).  A document is assigned a slot on first touch
+and keeps it until it exits the cascade, at which point the slot returns
+to the free list (``scheduler.SlotAllocator``).  Survivor compaction
+between stages is an index gather (``LM.take_states``) and a scatter back
+(``LM.put_states``) inside one jitted step — no per-document pytree
+stacking/slicing on the host.
 
-Token accounting (new vs cached, true unpadded counts) is recorded per
-stage and converted to $ with the same rates as the analytical cost model,
-so engine costs are directly comparable to ``run_cascade`` in tests.
+Stage steps compile once per static signature ``(bucket, cached_len,
+new_len, op_len, batch)``: prefill-into-arena is the ``cached_len == 0``
+case of extend, fraction extension writes the suffix at a static offset,
+and the operation suffix runs as masked decode steps whose per-document
+``kv_len`` (true, unpadded prefix length) rides through
+``kernels/decode_attention.py``'s scalar-prefetch mask.  Because the op
+read is length-masked, mixed TRUE lengths within a bucket share one
+launch, and mixed CACHED lengths (documents that entered at different
+stages) split into per-offset launches instead of forcing the seed
+engine's whole-batch re-prefill.
+
+Token accounting (new vs cached, true unpadded counts) and per-stage $
+cost are recorded in ``ServeStats`` with the same rates as the analytical
+cost model, so engine costs are directly comparable to ``run_cascade`` in
+tests.
 """
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -34,41 +51,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.tasks import Cascade, TaskConfig
+from ..core.tasks import Cascade
 from ..data.tokenizer import PAD, HashWordTokenizer, class_token
-from .scheduler import ServeStats, bucket_len, make_buckets
+from .arena import BucketArena
+from .scheduler import (ServeStats, SlotAllocator, fraction_len,
+                        pack_stage_batches)
 
 
-def _path_key(p) -> str:
-    return str(getattr(p, "key", getattr(p, "idx", p)))
-
-
-def _leaf_batch_axis(path) -> int:
-    """Batch axis of a state leaf: scan-stacked 'stages' leaves carry the
-    repetition dim first (R, B, ...); everything else is (B, ...)."""
-    return 1 if _path_key(path[0]) == "stages" else 0
-
-
-def _stack_states(states_list):
-    flat0, treedef = jax.tree_util.tree_flatten_with_path(states_list[0])
-    flats = [jax.tree.leaves(s) for s in states_list]
-    out = []
-    for li, (path, _) in enumerate(flat0):
-        ax = _leaf_batch_axis(path)
-        out.append(jnp.stack([f[li] for f in flats], axis=ax))
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def _slice_states(states, i: int):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(states)
-    out = [jnp.take(leaf, i, axis=_leaf_batch_axis(path))
-           for path, leaf in flat]
-    return jax.tree_util.tree_unflatten(treedef, out)
+def _pad_width(n: int) -> int:
+    """Static launch width: next power of two (few compiled batch shapes)."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 @dataclass
 class LMBackend:
-    """A model + params behind the engine, with per-doc KV state cache."""
+    """A model + params behind the engine, with a slot-based KV arena."""
 
     name: str
     model: Any                       # models.model.LM (or compatible)
@@ -76,12 +73,95 @@ class LMBackend:
     tokenizer: HashWordTokenizer
     rate_per_token: float = 1.0      # $ parity with the analytical model
     cached_discount: float = 0.5
+    # NOTE: arenas size per-slot allocation as bucket + op_reserve (rounded
+    # to a decode block on pallas runtimes); ``s_alloc`` is kept for seed
+    # API compatibility and no longer bounds arena memory.
     s_alloc: int = 4096
-    # doc_id -> (padded_cached_len, true_cached_tokens, per-doc states)
-    _cache: Dict[int, Tuple[int, int, Any]] = field(default_factory=dict)
+    op_reserve: int = 64             # suffix headroom past the bucket length
+    init_slots: int = 8              # initial arena capacity per bucket
+    _arenas: Dict[int, BucketArena] = field(default_factory=dict)
+    _alloc: SlotAllocator = field(default_factory=SlotAllocator)
+    _doc_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    _step: Optional[Any] = None      # jitted stage step (lazy)
+    host_overhead_s: float = 0.0     # pack/assembly/dispatch wall-clock
 
     def reset(self) -> None:
-        self._cache.clear()
+        self._arenas.clear()
+        self._alloc.reset()
+        self._doc_slot.clear()
+        self.host_overhead_s = 0.0
+        # the jitted step closes over model only; its compile cache survives
+
+    # ------------------------------------------------------------ slot admin
+    def cached_len(self, doc_id: int) -> int:
+        """Padded cached-prefix length of ``doc_id`` (0 when uncached)."""
+        bs = self._doc_slot.get(doc_id)
+        if bs is None:
+            return 0
+        bucket, slot = bs
+        return int(self._arenas[bucket].cached_len[slot])
+
+    def release(self, doc_id: int) -> None:
+        """Free the document's slot (it exited the cascade)."""
+        bs = self._doc_slot.pop(doc_id, None)
+        if bs is not None:
+            self._alloc.release(bs[0], doc_id)
+
+    def _arena(self, bucket: int) -> BucketArena:
+        ar = self._arenas.get(bucket)
+        if ar is None:
+            s_alloc = bucket + self.op_reserve
+            impl = getattr(self.model.rt, "attn_impl", "")
+            if impl.startswith("pallas"):
+                # keep the decode kernel's cache axis a block multiple so
+                # ops.decode_attention never pads K/V copies per step
+                blk = getattr(self.model.rt, "block_kv", 512)
+                if s_alloc > blk:       # <= blk is always a single block
+                    s_alloc = -(-s_alloc // blk) * blk
+            ar = BucketArena(self.model, bucket, s_alloc,
+                             capacity=self.init_slots)
+            self._arenas[bucket] = ar
+        return ar
+
+    def _slot_for(self, bucket: int, doc_id: int, arena: BucketArena) -> int:
+        prev = self._doc_slot.get(doc_id)
+        assert prev is None or prev[0] == bucket, \
+            f"doc {doc_id} already staged in bucket {prev[0]}, got {bucket}"
+        slot = self._alloc.peek(bucket, doc_id)
+        if slot < 0:
+            slot = self._alloc.slot_of(bucket, doc_id)
+            arena.ensure_capacity(self._alloc.high_water(bucket))
+            arena.clear_slot(slot)
+            self._doc_slot[doc_id] = (bucket, slot)
+        return slot
+
+    # --------------------------------------------------------------- compute
+    def _build_step(self):
+        model = self.model
+
+        def step(params, arena_states, slots, new_tok, op_tok, kv_true,
+                 *, c_len: int, op_len: int):
+            st = model.take_states(arena_states, slots)
+            if new_tok.shape[1] > 0:
+                # prefill (c_len == 0) / fraction-extend into the arena
+                _, st = model.extend(params, {"tokens": new_tok}, st,
+                                     q_offset=c_len)
+                arena_states = model.put_states(arena_states, slots, st)
+            # operation suffix: masked decode steps over the gathered COPY
+            # (kv_true = per-doc TRUE prefix length -> pad KV is invisible;
+            # the doc snapshot in the arena survives untouched)
+            logits = None
+            pos = kv_true.astype(jnp.int32)
+            B = slots.shape[0]
+            for t in range(op_len):
+                tok = jnp.broadcast_to(op_tok[t], (B,))
+                logits, st = model.decode_step(params, tok, st, pos + t)
+            return logits, arena_states
+
+        kwargs: Dict[str, Any] = {"static_argnames": ("c_len", "op_len")}
+        if jax.default_backend() != "cpu":      # CPU donation only warns
+            kwargs["donate_argnums"] = (1,)
+        return jax.jit(step, **kwargs)
 
     def class_confidences(self, logits: jnp.ndarray, n_classes: int
                           ) -> Tuple[np.ndarray, np.ndarray]:
@@ -103,61 +183,89 @@ class LMBackend:
     ) -> Tuple[np.ndarray, np.ndarray, int, int]:
         """Run (op, fraction) over one bucket batch.
 
-        All docs in the batch share ``bucket``; the fraction slice is
-        ``ceil(fraction * bucket)`` tokens (right-padded with PAD), so the
-        whole batch extends from the same static offset.
-        Returns (pred [B], conf [B], new_tokens, cached_tokens) with TRUE
-        (unpadded) token counts for $ accounting.
+        Documents may carry heterogeneous cached prefixes: the batch is
+        split into per-``cached_len`` launches (each reusing its cache)
+        rather than re-prefilling everyone.  Returns (pred [B], conf [B],
+        new_tokens, cached_tokens) with TRUE (unpadded) token counts for $
+        accounting.
         """
+        assert len(op_tokens) > 0, "operations must encode to >= 1 token"
+        assert len(op_tokens) <= self.op_reserve, \
+            f"operation longer than op_reserve ({len(op_tokens)})"
         B = len(doc_ids)
-        f_len = max(int(math.ceil(bucket * fraction)), 1)
-        entries = [self._cache.get(d) for d in doc_ids]
-        have_cache = all(e is not None for e in entries) and \
-            len({e[0] for e in entries if e is not None}) == 1
-        c_len = entries[0][0] if have_cache and entries[0] else 0
-        if c_len > f_len:
-            # cached prefix already covers this fraction: reuse as-is
-            states = _stack_states([e[2] for e in entries])
-            q_off = c_len
-            new_true = 0
-            cached_true = sum(min(e[1], self._true_len(doc_tokens[d],
-                                                       fraction))
-                              for e, d in zip(entries, doc_ids))
-            n_new = 0
-        else:
-            n_new = f_len - c_len
-            new_tok = np.full((B, max(n_new, 1)), PAD, np.int32)
-            new_true = 0
-            cached_true = 0
-            for i, d in enumerate(doc_ids):
-                toks = doc_tokens[d]
-                seg = toks[min(c_len, len(toks)): min(f_len, len(toks))]
+        f_len = fraction_len(bucket, fraction)
+        pred = np.zeros(B, np.int64)
+        conf = np.zeros(B, np.float64)
+        pos_of = {d: i for i, d in enumerate(doc_ids)}
+        new_true_total = 0
+        cached_true_total = 0
+
+        groups: Dict[int, List[int]] = {}
+        for d in doc_ids:
+            eff_c = min(self.cached_len(d), f_len)
+            groups.setdefault(eff_c, []).append(d)
+
+        for eff_c in sorted(groups):
+            ids = groups[eff_c]
+            p, c, new_t, cached_t = self._run_group(
+                ids, doc_tokens, bucket, f_len, fraction, eff_c,
+                op_tokens, n_classes)
+            for j, d in enumerate(ids):
+                pred[pos_of[d]] = p[j]
+                conf[pos_of[d]] = c[j]
+            new_true_total += new_t
+            cached_true_total += cached_t
+        return pred, conf, new_true_total, cached_true_total
+
+    def _run_group(self, ids, doc_tokens, bucket, f_len, fraction, eff_c,
+                   op_tokens, n_classes):
+        """One static-signature launch: all ``ids`` share ``eff_c``."""
+        t0 = time.perf_counter()
+        arena = self._arena(bucket)
+        slots = [self._slot_for(bucket, d, arena) for d in ids]
+        B = len(ids)
+        Bp = _pad_width(B)
+        n_new = f_len - eff_c                     # 0 => decode-only launch
+        op_len = len(op_tokens)
+
+        slots_arr = np.full(Bp, arena.scratch_slot, np.int32)
+        slots_arr[:B] = slots
+        new_tok = np.full((Bp, n_new), PAD, np.int32)
+        kv_true = np.ones(Bp, np.int32)
+        new_true = 0
+        cached_true = 0
+        for i, d in enumerate(ids):
+            toks = doc_tokens[d]
+            slot = slots[i]
+            if n_new > 0:
+                seg = toks[min(eff_c, len(toks)): min(f_len, len(toks))]
                 new_tok[i, : len(seg)] = seg
                 new_true += len(seg)
-                cached_true += min(c_len, len(toks)) if have_cache else 0
-            if have_cache and c_len > 0:
-                states = _stack_states([e[2] for e in entries])
-                _, states = self.model.extend(
-                    self.params, {"tokens": jnp.asarray(new_tok)},
-                    states, q_offset=c_len)
+                cached_true += min(eff_c, len(toks))
             else:
-                _, states = self.model.prefill(
-                    self.params, {"tokens": jnp.asarray(new_tok)},
-                    s_alloc=self.s_alloc)
-            q_off = f_len
-            for i, d in enumerate(doc_ids):
-                toks = doc_tokens[d]
-                true_cached = min(f_len, len(toks))
-                self._cache[d] = (f_len, true_cached,
-                                  _slice_states(states, i))
+                cached_true += min(int(arena.true_len[slot]),
+                                   self._true_len(toks, fraction))
+            kv_true[i] = self._true_len(toks, fraction)
+        self.host_overhead_s += time.perf_counter() - t0
 
-        # operation extension (doc-state snapshot survives untouched)
-        opb = np.broadcast_to(op_tokens[None],
-                              (B, len(op_tokens))).astype(np.int32)
-        logits, _ = self.model.extend(
-            self.params, {"tokens": jnp.asarray(opb)}, states, q_offset=q_off)
-        pred, conf = self.class_confidences(logits, n_classes)
-        return pred, conf, new_true + B * len(op_tokens), cached_true
+        if self._step is None:
+            self._step = self._build_step()
+        t0 = time.perf_counter()
+        logits, new_states = self._step(
+            self.params, arena.states, jnp.asarray(slots_arr),
+            jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
+            jnp.asarray(kv_true), c_len=eff_c, op_len=op_len)
+        arena.states = new_states
+        self.host_overhead_s += time.perf_counter() - t0   # async dispatch
+
+        if n_new > 0:
+            for i, d in enumerate(ids):
+                slot = slots[i]
+                arena.cached_len[slot] = f_len
+                arena.true_len[slot] = min(f_len, len(doc_tokens[d]))
+        pred, conf = self.class_confidences(
+            np.asarray(logits)[:B], n_classes)
+        return pred, conf, new_true + B * op_len, cached_true
 
     @staticmethod
     def _true_len(toks: np.ndarray, fraction: float) -> int:
@@ -171,24 +279,40 @@ class EngineResult:
     exit_stage: Dict[int, int]
     cost: float
     stats: ServeStats
+    stage_cost: List[float] = field(default_factory=list)
 
 
 @dataclass
 class CascadeEngine:
     """Executes a task cascade over documents with real backends."""
 
-    backends: Dict[str, LMBackend]          # "proxy"/"oracle" -> backend
+    backends: Dict[str, Any]                # "proxy"/"oracle" -> backend
     operations: Dict[str, str]              # op id -> operation text
     n_classes: int
     batch_size: int = 8
+    _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
+        default_factory=dict, repr=False)
 
-    def _op_tokens(self, backend: LMBackend, op_id: str) -> np.ndarray:
-        return np.asarray(
-            backend.tokenizer.encode(self.operations[op_id]), np.int32)
+    def _op_tokens(self, backend, op_id: str) -> np.ndarray:
+        key = (backend.name, op_id)
+        toks = self._op_tok_cache.get(key)
+        if toks is None:
+            toks = np.asarray(
+                backend.tokenizer.encode(self.operations[op_id]), np.int32)
+            self._op_tok_cache[key] = toks
+        return toks
 
     def run(self, cascade: Cascade, docs: Mapping[int, str],
-            oracle_model: str = "oracle") -> EngineResult:
-        """docs: doc_id -> (already reordered) document text."""
+            oracle_model: str = "oracle",
+            enter_stage: Optional[Mapping[int, int]] = None) -> EngineResult:
+        """docs: doc_id -> (already reordered) document text.
+
+        ``enter_stage`` (doc_id -> stage index) admits documents mid-run —
+        the streaming-arrival pattern.  Late entrants share buckets with
+        docs that already carry cached prefixes; the per-``cached_len``
+        launch split keeps the veterans' caches hot.  Stage indices are
+        clamped to the oracle stage, so every admitted document resolves.
+        """
         stats = ServeStats()
         tok: Dict[str, Dict[int, np.ndarray]] = {m: {} for m in self.backends}
         full_len: Dict[int, int] = {}
@@ -198,8 +322,15 @@ class CascadeEngine:
                 ids = np.asarray(be.tokenizer.encode(text), np.int32)
                 tok[m][d] = ids
                 full_len[d] = len(ids)
+        last_stage = len(cascade.tasks)          # oracle fallthrough index
+        requested = dict(enter_stage or {})
+        enter_stage = {}
+        for d, s in requested.items():
+            if d not in docs:
+                raise KeyError(f"enter_stage doc {d!r} not in docs")
+            enter_stage[d] = min(max(int(s), 0), last_stage)
 
-        unresolved = list(docs.keys())
+        unresolved = [d for d in docs if enter_stage.get(d, 0) <= 0]
         pred: Dict[int, int] = {}
         conf: Dict[int, float] = {}
         exit_stage: Dict[int, int] = {}
@@ -207,8 +338,11 @@ class CascadeEngine:
 
         stages = list(cascade.tasks) + [None]        # None = oracle task
         for si, task in enumerate(stages):
+            if si > 0:
+                unresolved.extend(
+                    d for d, s in enter_stage.items() if s == si)
             if not unresolved:
-                break
+                continue
             if task is None:
                 model, op_id, fraction, thr = oracle_model, "o_orig", 1.0, None
             else:
@@ -217,23 +351,33 @@ class CascadeEngine:
                 fraction = task.config.fraction
                 thr = task.threshold_vector(self.n_classes)
             be = self.backends[model]
-            batches = make_buckets(unresolved, full_len, self.batch_size)
+            cached = {d: be.cached_len(d) if hasattr(be, "cached_len") else 0
+                      for d in unresolved}
+            batches = pack_stage_batches(
+                unresolved, full_len, cached, fraction, self.batch_size)
             survivors = []
-            for blen, ids in batches:
+            for sb in batches:
+                ids = list(sb.doc_ids)
                 p, c, new_t, cached_t = be.run_stage(
-                    ids, tok[model], blen, fraction,
+                    ids, tok[model], sb.bucket, fraction,
                     self._op_tokens(be, op_id), self.n_classes)
-                stats.record(si, len(ids), new_t, cached_t)
+                batch_cost = (
+                    new_t * be.rate_per_token
+                    + cached_t * be.rate_per_token * be.cached_discount)
+                stats.record(si, len(ids), new_t, cached_t, batch_cost)
                 stats.batches += 1
-                cost += (new_t * be.rate_per_token
-                         + cached_t * be.rate_per_token * be.cached_discount)
+                cost += batch_cost
                 for i, d in enumerate(ids):
                     take = thr is None or c[i] >= thr[p[i]]
                     if take:
                         pred[d] = int(p[i])
                         conf[d] = float(c[i])
                         exit_stage[d] = si
+                        for b in self.backends.values():
+                            if hasattr(b, "release"):
+                                b.release(d)
                     else:
                         survivors.append(d)
             unresolved = survivors
-        return EngineResult(pred, conf, exit_stage, cost, stats)
+        return EngineResult(pred, conf, exit_stage, cost, stats,
+                            stage_cost=list(stats.stage_cost))

@@ -1,16 +1,28 @@
-"""Serving scheduler: bucketed batching, survivor compaction, stragglers.
+"""Serving scheduler: bucketed batching, slot allocation, batch packing.
 
 TPU serving wants a small set of compiled shapes.  Documents are grouped
-into power-of-two *length buckets* per cascade stage; unresolved survivors
-are compacted into full batches between stages (no ragged launches); and a
-straggler policy can migrate queued work between serving shards
+into power-of-two *length buckets* per cascade stage; within a bucket each
+document owns a **slot** in a persistent KV arena for its lifetime
+(``SlotAllocator``), so survivor compaction between stages is an index
+gather, not a pytree rebuild.
+
+``pack_stage_batches`` is the cross-bucket packer: it walks every bucket in
+one pass and emits ``StageBatch`` launches grouped by the static step
+signature ``(bucket, cached_len)`` — documents that entered the cascade at
+different stages (different cached prefixes) land in different launches of
+the same bucket instead of forcing a whole-batch re-prefill.  Documents
+whose cached prefix already covers the requested fraction share a single
+decode-only launch per bucket regardless of how long their caches are
+(the per-document valid length rides in ``kv_len``, which is dynamic).
+
+A straggler policy can migrate queued work between serving shards
 (distributed.fault.StragglerPolicy).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
@@ -50,28 +62,143 @@ def make_buckets(doc_ids: Iterable[int], lengths: Dict[int, int],
     return out
 
 
+# ---------------------------------------------------------------------------
+# Slot allocation (document -> arena slot, per bucket)
+# ---------------------------------------------------------------------------
+
+class SlotAllocator:
+    """Assigns each document a per-bucket arena slot for its lifetime.
+
+    Slots freed by resolved documents are recycled before the high-water
+    mark grows, so a streaming workload's arena footprint tracks the live
+    set, not the corpus.
+    """
+
+    def __init__(self) -> None:
+        self._slot: Dict[int, Dict[int, int]] = {}     # bucket -> doc -> slot
+        self._free: Dict[int, List[int]] = {}          # bucket -> free slots
+        self._high: Dict[int, int] = {}                # bucket -> high water
+
+    def slot_of(self, bucket: int, doc: int) -> int:
+        """Slot of ``doc`` (allocating one on first touch)."""
+        slots = self._slot.setdefault(bucket, {})
+        if doc in slots:
+            return slots[doc]
+        free = self._free.setdefault(bucket, [])
+        if free:
+            s = free.pop()
+        else:
+            s = self._high.get(bucket, 0)
+            self._high[bucket] = s + 1
+        slots[doc] = s
+        return s
+
+    def peek(self, bucket: int, doc: int) -> int:
+        """Slot of ``doc`` or -1 without allocating."""
+        return self._slot.get(bucket, {}).get(doc, -1)
+
+    def release(self, bucket: int, doc: int) -> None:
+        slots = self._slot.get(bucket, {})
+        s = slots.pop(doc, None)
+        if s is not None:
+            self._free.setdefault(bucket, []).append(s)
+
+    def high_water(self, bucket: int) -> int:
+        return self._high.get(bucket, 0)
+
+    def live(self, bucket: int) -> int:
+        return len(self._slot.get(bucket, {}))
+
+    def reset(self) -> None:
+        self._slot.clear()
+        self._free.clear()
+        self._high.clear()
+
+
+# ---------------------------------------------------------------------------
+# Stage batch packing
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageBatch:
+    """One launch: all docs share ``bucket`` and the static ``cached_len``.
+
+    ``cached_len == f_len`` (the fraction slice for this bucket) marks a
+    decode-only launch: every doc's cache already covers the fraction and
+    only the operation suffix runs (per-doc valid lengths are dynamic).
+    """
+    bucket: int
+    cached_len: int            # static q_offset of the extension (== f_len
+                               # for decode-only launches)
+    doc_ids: Tuple[int, ...]
+
+
+def fraction_len(bucket: int, fraction: float) -> int:
+    return max(int(math.ceil(bucket * fraction)), 1)
+
+
+def pack_stage_batches(
+    doc_ids: Iterable[int],
+    lengths: Mapping[int, int],
+    cached_len: Mapping[int, int],
+    fraction: float,
+    batch_size: int,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+) -> List[StageBatch]:
+    """Pack one stage's documents into static-signature launches.
+
+    Groups by (bucket, effective cached length) where the effective length
+    clamps to the stage's fraction slice — caches that already cover the
+    fraction collapse into one decode-only group per bucket.  Within a
+    group, batches fill to ``batch_size`` (survivor compaction).
+    """
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for d in doc_ids:
+        blen = bucket_len(lengths[d], buckets)
+        f_len = fraction_len(blen, fraction)
+        eff_c = min(cached_len.get(d, 0), f_len)
+        groups.setdefault((blen, eff_c), []).append(d)
+    out = []
+    for (blen, eff_c) in sorted(groups):
+        ids = groups[(blen, eff_c)]
+        for i in range(0, len(ids), batch_size):
+            out.append(StageBatch(blen, eff_c,
+                                  tuple(ids[i: i + batch_size])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving statistics ($-aware)
+# ---------------------------------------------------------------------------
+
 @dataclass
 class ServeStats:
     stage_docs: List[int] = field(default_factory=list)
     stage_new_tokens: List[int] = field(default_factory=list)
     stage_cached_tokens: List[int] = field(default_factory=list)
+    stage_cost: List[float] = field(default_factory=list)
     batches: int = 0
 
     def record(self, stage: int, docs: int, new_tokens: int,
-               cached_tokens: int) -> None:
+               cached_tokens: int, cost: float = 0.0) -> None:
         while len(self.stage_docs) <= stage:
             self.stage_docs.append(0)
             self.stage_new_tokens.append(0)
             self.stage_cached_tokens.append(0)
+            self.stage_cost.append(0.0)
         self.stage_docs[stage] += docs
         self.stage_new_tokens[stage] += new_tokens
         self.stage_cached_tokens[stage] += cached_tokens
+        self.stage_cost[stage] += cost
 
     def total_new_tokens(self) -> int:
         return sum(self.stage_new_tokens)
 
     def total_cached_tokens(self) -> int:
         return sum(self.stage_cached_tokens)
+
+    def total_cost(self) -> float:
+        return sum(self.stage_cost)
 
     def cache_hit_rate(self) -> float:
         tot = self.total_new_tokens() + self.total_cached_tokens()

@@ -25,14 +25,25 @@ assert len(jax.devices()) == 8
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 
 
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: jax.shard_map (>=0.5, check_vma kw) vs
+    jax.experimental.shard_map (0.4.x, check_rep kw)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def check_ring_all_gather():
     x = jnp.arange(32.0).reshape(8, 4)
 
     def body(xl):
         return ring_all_gather(xl, "data", axis=0)
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                        out_specs=P("data", None), check_vma=False)(x)
+    out = shard_map(body, mesh=mesh, in_specs=P("data", None),
+                        out_specs=P("data", None))(x)
     # every shard holds the full concat -> output tiled 4x along axis 0
     out_np = np.asarray(out)
     np.testing.assert_allclose(out_np[:8], np.asarray(x))
@@ -45,8 +56,8 @@ def check_ring_reduce_scatter():
     def body(xl):
         return ring_reduce_scatter(xl, "model", axis=1)
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=P(None, "model"),
-                        out_specs=P(None, "model"), check_vma=False)(x)
+    out = shard_map(body, mesh=mesh, in_specs=P(None, "model"),
+                        out_specs=P(None, "model"))(x)
     # reference: reduce over model shards then scatter along axis 1
     a, b = np.asarray(x)[:, :4], np.asarray(x)[:, 4:]
     ref_rs = a + b              # each half reduces to the same sum
@@ -80,8 +91,8 @@ def check_compressed_psum():
         red, err = compressed_psum(xl, "data")
         return red
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                        out_specs=P("data", None), check_vma=False)(x)
+    out = shard_map(body, mesh=mesh, in_specs=P("data", None),
+                        out_specs=P("data", None))(x)
     # reference: mean over the 4 data shards
     ref_mean = np.asarray(x).reshape(4, 2, 16).mean(axis=0)
     out_np = np.asarray(out)[:2]
@@ -96,8 +107,8 @@ def check_matmul_ag_overlap():
     def body(xl, w):
         return matmul_ag_overlap(xl, w, "data")
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=(P(None, "data", None), P()),
-                        out_specs=P(None, None, None), check_vma=False)(x, w)
+    out = shard_map(body, mesh=mesh, in_specs=(P(None, "data", None), P()),
+                        out_specs=P(None, None, None))(x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
                                atol=1e-4, rtol=1e-4)
     print("PASS matmul_ag_overlap")

@@ -1,7 +1,7 @@
 """Hypothesis property tests for cascade-execution invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import CascadeCostModel
 from repro.core.tasks import Cascade, Task, TaskConfig, TaskScores, run_cascade

@@ -3,7 +3,7 @@ WSR estimator validity/power, Alg 3/5 guarantee, cost model properties.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.assembly import (brute_force_mssc, greedy_assembly,
                                  greedy_mssc, mssc_instance_to_scores)

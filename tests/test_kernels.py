@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -84,6 +84,56 @@ def test_relevance_score_vs_ref(C, T, D):
     out_pal = ops.relevance_score(x, lengths, w, b,
                                   impl="pallas_interpret", block_c=8)
     np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_relevance_score_ragged_chunk_count():
+    """C=130 with block_c=128: internal padding, exact [C] output."""
+    C, T, D = 130, 4, 16
+    x = jax.random.normal(jax.random.PRNGKey(4), (C, T, D), jnp.float32)
+    lengths = jnp.asarray(
+        np.random.default_rng(2).integers(1, T + 1, C), jnp.int32)
+    w = jax.random.normal(jax.random.PRNGKey(5), (D,), jnp.float32)
+    b = jnp.asarray(-0.2, jnp.float32)
+    out_ref = ref.relevance_reference(x, lengths, w, b)
+    out_pal = ops.relevance_score(x, lengths, w, b,
+                                  impl="pallas_interpret", block_c=128)
+    assert out_pal.shape == (C,)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_decode_attention_ragged_cache_len():
+    """S not a block multiple: ops pads the cache axis; kv_len masks pads."""
+    B, S, Hq, Hkv, Dh = 2, 72, 4, 2, 16     # 72 % 16 != 0
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, Hq, Dh), jnp.float32)
+    _, k, v = _mk_qkv(jax.random.PRNGKey(7), B, 1, S, Hq, Hkv, Dh,
+                      jnp.float32)
+    kv_len = jnp.asarray([40, 72], jnp.int32)
+    out_ref = ref.decode_reference(q, k, v, kv_len=kv_len)
+    out_pal = ops.decode_attention(q, k, v, kv_len,
+                                   impl="pallas_interpret", block_kv=16)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
+                               atol=2e-5, rtol=1e-2)
+
+
+def test_arena_decode_attention_gathers_slots():
+    """Arena layout: rows addressed by slot id match direct decode."""
+    N, B, S, Hq, Hkv, Dh = 5, 3, 32, 4, 2, 16
+    key = jax.random.PRNGKey(8)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena = jax.random.normal(jax.random.fold_in(key, 1),
+                                (N, S, Hkv, Dh), jnp.float32)
+    v_arena = jax.random.normal(jax.random.fold_in(key, 2),
+                                (N, S, Hkv, Dh), jnp.float32)
+    slots = jnp.asarray([4, 0, 2], jnp.int32)
+    kv_len = jnp.asarray([10, 32, 7], jnp.int32)
+    out = ops.arena_decode_attention(q, k_arena, v_arena, slots, kv_len,
+                                     impl="naive")
+    out_ref = ref.decode_reference(
+        q, k_arena[np.asarray(slots)], v_arena[np.asarray(slots)],
+        kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
                                atol=2e-5, rtol=1e-5)
 
 

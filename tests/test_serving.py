@@ -14,7 +14,8 @@ from repro.data.tokenizer import HashWordTokenizer
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
 from repro.serving.engine import CascadeEngine, LMBackend
-from repro.serving.scheduler import ServeStats, bucket_len, make_buckets
+from repro.serving.scheduler import (ServeStats, bucket_len, make_buckets,
+                                     pack_stage_batches)
 
 
 @pytest.fixture(scope="module")
@@ -94,6 +95,90 @@ def test_engine_smaller_fraction_reuses_larger_cache(engine, docs):
     _, _, new_t, cached_t = be.run_stage([d0], toks, blen, 0.5, op, 2)
     assert new_t == len(op)            # only operation tokens are new
     assert cached_t > 0
+
+
+def test_mixed_entry_stages_reuse_cached_prefixes(engine, docs):
+    """Docs that enter the cascade at different stages share a bucket but
+    keep their cached prefixes: the stage splits into per-cached-len
+    launches instead of re-prefilling the whole batch (the seed fallback).
+    """
+    thr = {0: 2.0, 1: 2.0}     # impossible: nothing exits before the oracle
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+    late = sorted(docs)[0]
+    res = engine.run(ladder, docs, enter_stage={late: 1})
+    # stage 1 mixes veterans (cached at f=0.25) with the late entrant
+    # (cached_len 0); veterans' prefixes must be billed as cached
+    assert res.stats.stage_cached_tokens[1] > 0
+    # the late entrant only ever runs stages 1 and 2
+    assert res.stats.stage_docs[0] == len(docs) - 1
+    assert res.stats.stage_docs[1] == len(docs)
+    assert set(res.pred) == set(docs)
+
+
+def test_run_stage_heterogeneous_cache_matches_homogeneous(engine, docs):
+    """A mixed-cache batch returns the same confidences as separate runs."""
+    be = engine.backends["proxy"]
+    ids = sorted(docs)[:2]
+    toks = {d: np.asarray(be.tokenizer.encode(docs[d]), np.int32)
+            for d in ids}
+    blen = max(bucket_len(len(t)) for t in toks.values())
+    op = np.asarray(be.tokenizer.encode("mixed op"), np.int32)
+    # homogeneous reference: each doc alone, fresh, straight to f=1.0
+    be.reset()
+    _, c0, *_ = be.run_stage([ids[0]], toks, blen, 1.0, op, 2)
+    _, c1, *_ = be.run_stage([ids[1]], toks, blen, 1.0, op, 2)
+    # mixed: doc0 pre-cached at 0.25, doc1 cold, one batched call
+    be.reset()
+    be.run_stage([ids[0]], toks, blen, 0.25, op, 2)
+    _, c_mix, new_t, cached_t = be.run_stage(ids, toks, blen, 1.0, op, 2)
+    assert cached_t > 0                       # doc0's prefix was reused
+    np.testing.assert_allclose(c_mix, [c0[0], c1[0]], atol=1e-5)
+
+
+def test_slot_recycling(engine, docs):
+    """Released slots are re-issued before the arena grows."""
+    be = engine.backends["proxy"]
+    be.reset()
+    ids = sorted(docs)[:3]
+    toks = {d: np.asarray(be.tokenizer.encode(docs[d]), np.int32)
+            for d in ids}
+    blen = max(bucket_len(len(t)) for t in toks.values())
+    op = np.asarray(be.tokenizer.encode("op"), np.int32)
+    be.run_stage(ids[:2], toks, blen, 1.0, op, 2)
+    assert be._alloc.high_water(blen) == 2
+    be.release(ids[0])
+    be.run_stage([ids[2]], toks, blen, 1.0, op, 2)
+    assert be._alloc.high_water(blen) == 2    # reused the freed slot
+    assert be.cached_len(ids[2]) == max(int(np.ceil(blen)), 1)
+
+
+def test_engine_stage_cost_exposed(engine, docs):
+    cascade = Cascade([
+        Task(TaskConfig("proxy", "sur_1", 0.25), {0: 0.7, 1: 0.7}),
+    ])
+    res = engine.run(cascade, docs)
+    assert res.stage_cost == res.stats.stage_cost
+    assert res.cost == pytest.approx(sum(res.stage_cost))
+    assert res.cost == pytest.approx(res.stats.total_cost())
+    assert all(c >= 0 for c in res.stage_cost)
+
+
+def test_pack_stage_batches_groups_by_cached_len():
+    lengths = {1: 30, 2: 30, 3: 30, 4: 100}
+    cached = {1: 8, 2: 8, 3: 0, 4: 0}
+    batches = pack_stage_batches([1, 2, 3, 4], lengths, cached,
+                                 fraction=1.0, batch_size=8)
+    keys = {(b.bucket, b.cached_len): list(b.doc_ids) for b in batches}
+    assert keys == {(32, 8): [1, 2], (32, 0): [3], (128, 0): [4]}
+    # caches covering the fraction collapse into one decode-only group
+    batches = pack_stage_batches([1, 2, 3], lengths,
+                                 {1: 32, 2: 16, 3: 32},
+                                 fraction=0.25, batch_size=8)
+    assert [(b.bucket, b.cached_len, b.doc_ids) for b in batches] == \
+        [(32, 8, (1, 2, 3))]
 
 
 def test_bucketing():
