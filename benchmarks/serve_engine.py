@@ -1,6 +1,7 @@
-"""Serving-engine data-plane benchmark: seed dict-cache vs slot arena.
+"""Serving-engine benchmark: static data-plane comparison + streaming
+(Poisson-arrival) workload.
 
-Runs the same task cascade over the same simulated corpus through
+Static section (PR 1): the same task cascade over the same corpus through
 
   * the SEED engine (``serving.legacy_engine``): per-doc dict cache,
     per-stage ``_stack_states``/``_slice_states`` pytree rebuilds, eager
@@ -9,14 +10,26 @@ Runs the same task cascade over the same simulated corpus through
     arenas, jitted per-(bucket, cached_len) stage steps, gather/scatter
     survivor compaction, kv_len-masked op suffixes.
 
-Reports docs/sec, per-stage host overhead (wall-clock spent in the Python
-data plane: state stack/slice vs slot pack + dispatch), and cache-hit
-rate.  Both engines are run twice and the warm (second) pass is reported,
-so one-time tracing/compilation is excluded from the comparison on both
-sides.
+Streaming section (PR 2): documents arrive as a Poisson process and three
+control planes serve the stream —
+
+  * ``request_loop``: the continuous-batching loop (``submit``/``step``)
+    admits each document the moment it arrives, packing cross-stage
+    launches; veterans keep their KV caches, arrivals never force a
+    re-prefill;
+  * ``stage_sync``: the arena data plane driven stage-synchronously in
+    WAVES — arrivals buffer while a whole cascade runs, then the next
+    wave starts (the PR-1 control plane under streaming load);
+  * ``legacy``: the seed engine driven in the same waves.
+
+Reports p50/p99 per-document latency (scheduled arrival -> resolution),
+docs/sec, cache-hit rate, and $-cost per control plane.  Engines are
+compile-warmed on the same corpus before the timed pass.
 
     PYTHONPATH=src python benchmarks/serve_engine.py --docs 512 \
-        --out BENCH_serve_engine.json
+        --stream-docs 96 --out BENCH_serve_engine.json
+
+``--smoke`` runs a tiny CPU workload and asserts non-empty stats (CI).
 """
 from __future__ import annotations
 
@@ -35,6 +48,8 @@ from repro.configs import get_reduced
 from repro.core.tasks import Cascade, Task, TaskConfig
 from repro.data.documents import generate_corpus
 from repro.data.tokenizer import HashWordTokenizer
+from repro.launch.serve import (drive_request_loop, poisson_arrivals,
+                                warm_arena)
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
 from repro.serving.engine import CascadeEngine, LMBackend
@@ -63,14 +78,29 @@ def make_backends(kind: str, tokz, models):
     }
 
 
-def run_one(kind: str, cascade, docs, tokz, models, batch_size: int):
+def make_engine(kind: str, tokz, models, batch_size: int):
     backends = make_backends(kind, tokz, models)
-    if kind == "seed":
-        eng = SeedCascadeEngine(backends, OPS, n_classes=2,
-                                batch_size=batch_size)
-    else:
-        eng = CascadeEngine(backends, OPS, n_classes=2,
-                            batch_size=batch_size)
+    cls = {"seed": SeedCascadeEngine, "arena": CascadeEngine}[kind]
+    return cls(backends, OPS, n_classes=2, batch_size=batch_size), backends
+
+
+def forced_ladder():
+    """Impossible thresholds: every doc walks the whole ladder, so every
+    control plane does IDENTICAL token work and the comparison isolates
+    scheduling + data plane."""
+    thr = {0: 2.0, 1: 2.0}
+    return Cascade([
+        Task(TaskConfig("proxy", "sur_1", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Static (PR-1) section: seed vs arena, same corpus, batch semantics
+# ---------------------------------------------------------------------------
+
+def run_static(kind: str, cascade, docs, tokz, models, batch_size: int):
+    eng, backends = make_engine(kind, tokz, models, batch_size)
     result = {}
     for run in ("cold", "warm"):
         t0 = time.perf_counter()
@@ -95,35 +125,114 @@ def run_one(kind: str, cascade, docs, tokz, models, batch_size: int):
     return result
 
 
+# ---------------------------------------------------------------------------
+# Streaming section: Poisson arrivals, three control planes
+# ---------------------------------------------------------------------------
+
+def _stream_report(n_docs, wall, latencies, new_tok, cached_tok, cost,
+                   batches, evictions=None):
+    tot = new_tok + cached_tok
+    lat = np.asarray(latencies) if latencies else np.zeros(1)
+    rep = {
+        "wall_s": round(wall, 4),
+        "docs_per_s": round(n_docs / max(wall, 1e-9), 3),
+        "latency_p50_ms": round(1e3 * float(np.quantile(lat, 0.5)), 1),
+        "latency_p99_ms": round(1e3 * float(np.quantile(lat, 0.99)), 1),
+        "batches": batches,
+        "cache_hit_rate": round(cached_tok / tot if tot else 0.0, 4),
+        "new_tokens": int(new_tok),
+        "cached_tokens": int(cached_tok),
+        "cost": round(cost, 4),
+    }
+    if evictions is not None:
+        rep["evictions"] = evictions
+    return rep
+
+
+def stream_request_loop(cascade, docs, arrivals, tokz, models,
+                        batch_size: int):
+    eng, _ = make_engine("arena", tokz, models, batch_size)
+    warm_arena(eng, cascade, docs, batch_size)
+    res, wall = drive_request_loop(eng, cascade, docs, arrivals)
+    assert set(res.pred) == set(docs)
+    st = res.stats
+    return _stream_report(
+        len(docs), wall, st.latencies, st.total_new_tokens(),
+        st.total_cached_tokens(), res.cost, st.batches,
+        evictions=st.evictions)
+
+
+def stream_waves(kind: str, cascade, docs, arrivals, tokz, models,
+                 batch_size: int):
+    """Stage-synchronous streaming baseline: arrivals buffer during each
+    whole-cascade ``run()`` wave and are only admitted at the next wave."""
+    eng, _ = make_engine(kind, tokz, models, batch_size)
+    if kind == "seed":
+        eng.run(cascade, docs)                   # eager: one warm pass
+    else:
+        warm_arena(eng, cascade, docs, batch_size)
+    order = sorted(docs, key=lambda d: (arrivals[d], d))
+    t0 = time.perf_counter()
+    i = 0
+    latencies = []
+    new_tok = cached_tok = batches = 0
+    cost = 0.0
+    resolved = 0
+    while i < len(order):
+        now = time.perf_counter() - t0
+        wave = []
+        while i < len(order) and arrivals[order[i]] <= now:
+            wave.append(order[i])
+            i += 1
+        if not wave:
+            time.sleep(min(arrivals[order[i]] - now, 0.05))
+            continue
+        out = eng.run(cascade, {d: docs[d] for d in wave})
+        stats = out[2] if kind == "seed" else out.stats
+        cost += out[1] if kind == "seed" else out.cost
+        end = time.perf_counter() - t0
+        latencies += [end - arrivals[d] for d in wave]
+        new_tok += stats.total_new_tokens()
+        cached_tok += stats.total_cached_tokens()
+        batches += stats.batches
+        resolved += len(wave)
+    wall = time.perf_counter() - t0
+    assert resolved == len(docs)
+    return _stream_report(len(docs), wall, latencies, new_tok, cached_tok,
+                          cost, batches)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--stream-docs", type=int, default=96)
     ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (docs/s); 0 = 0.6x the "
+                         "arena engine's measured static throughput")
+    ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--out", default="BENCH_serve_engine.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: assert non-empty stats, no file")
     args = ap.parse_args()
+    if args.smoke:
+        args.docs = min(args.docs, 16)
+        args.stream_docs = min(args.stream_docs, 12)
+        args.batch_size = min(args.batch_size, 4)
 
     tokz = HashWordTokenizer(vocab_size=512)
     models = {"proxy": _model(1), "oracle": _model(2)}
-    corpus = generate_corpus(args.docs, avg_lines=12, seed=7)
+    corpus = generate_corpus(args.docs, avg_lines=12, seed=args.seed)
     docs = {d.doc_id: d.text for d in corpus}
-    # fraction ladder on the proxy with impossible thresholds: every doc
-    # walks the whole ladder to the oracle, so both engines do IDENTICAL
-    # token work and the comparison isolates the data plane (confidence
-    # numerics differ slightly between the engines — the arena op suffix
-    # is kv_len-masked — which would otherwise skew early exits)
-    thr = {0: 2.0, 1: 2.0}
-    cascade = Cascade([
-        Task(TaskConfig("proxy", "sur_1", 0.25), thr),
-        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
-    ])
+    cascade = forced_ladder()
 
     report = {"n_docs": args.docs, "batch_size": args.batch_size,
               "backend": jax.default_backend(),
               "workload": "synthetic court-opinion corpus (generate_corpus)"}
     for kind in ("seed", "arena"):
-        print(f"== {kind} engine ==", flush=True)
-        report[kind] = run_one(kind, cascade, docs, tokz, models,
-                               args.batch_size)
+        print(f"== {kind} engine (static) ==", flush=True)
+        report[kind] = run_static(kind, cascade, docs, tokz, models,
+                                  args.batch_size)
         print(json.dumps(report[kind]["warm"], indent=2), flush=True)
 
     sw, aw = report["seed"]["warm"], report["arena"]["warm"]
@@ -136,7 +245,47 @@ def main():
             round(sw["host_overhead_per_batch_ms"]
                   / max(aw["host_overhead_per_batch_ms"], 1e-9), 2),
     }
-    print("summary:", json.dumps(report["summary"], indent=2))
+    print("static summary:", json.dumps(report["summary"], indent=2))
+
+    # ---- streaming: Poisson arrivals over a subset of the corpus
+    stream_ids = sorted(docs)[: args.stream_docs]
+    stream_docs = {d: docs[d] for d in stream_ids}
+    rate = args.rate or 0.6 * aw["docs_per_s"]
+    arrivals = poisson_arrivals(stream_ids, rate, args.seed)
+    streaming = {"n_docs": len(stream_ids), "rate_docs_per_s": round(rate, 3)}
+    drivers = {
+        "request_loop": lambda: stream_request_loop(
+            cascade, stream_docs, arrivals, tokz, models, args.batch_size),
+        "stage_sync": lambda: stream_waves(
+            "arena", cascade, stream_docs, arrivals, tokz, models,
+            args.batch_size),
+        "legacy": lambda: stream_waves(
+            "seed", cascade, stream_docs, arrivals, tokz, models,
+            args.batch_size),
+    }
+    for name, fn in drivers.items():
+        print(f"== {name} (streaming, rate {rate:.1f}/s) ==", flush=True)
+        streaming[name] = fn()
+        print(json.dumps(streaming[name], indent=2), flush=True)
+    rl, ss = streaming["request_loop"], streaming["stage_sync"]
+    streaming["summary"] = {
+        "p50_speedup_vs_stage_sync":
+            round(ss["latency_p50_ms"] / max(rl["latency_p50_ms"], 1e-9), 2),
+        "p99_speedup_vs_stage_sync":
+            round(ss["latency_p99_ms"] / max(rl["latency_p99_ms"], 1e-9), 2),
+        "cache_hit_ge_stage_sync":
+            rl["cache_hit_rate"] >= ss["cache_hit_rate"],
+    }
+    report["streaming"] = streaming
+    print("streaming summary:", json.dumps(streaming["summary"], indent=2))
+
+    if args.smoke:
+        assert rl["latency_p50_ms"] > 0 and rl["new_tokens"] > 0
+        assert rl["cache_hit_rate"] >= ss["cache_hit_rate"]
+        assert aw["new_tokens"] == sw["new_tokens"]   # identical token work
+        print("smoke OK")
+        return
+
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

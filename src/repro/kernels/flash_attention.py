@@ -8,6 +8,9 @@ Supports:
     ``q_offset`` tokens already live in the KV operand.  This is the task-
     cascade primitive: extending a document from fraction f_j to f_i > f_j
     re-uses the cached prefix KV and only computes attention for new queries.
+  * ``kv_len`` [B] — per-row valid KV length (bucket-padded serving batches:
+    keys at positions >= kv_len[b] are PAD and masked for every query).
+    Rides in scalar-prefetch SMEM like the decode kernel's length mask.
 
 Layout: q [B, Hq, Sq, Dh]; k/v [B, Hkv, Skv, Dh] (callers transpose from
 [B, S, H, Dh]).  Grid = (B, Hq, nq, nkv) with the kv dimension innermost;
@@ -33,6 +36,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
+    kv_len_ref,                   # SMEM [B] scalar prefetch
     q_ref, k_ref, v_ref,          # VMEM blocks
     o_ref,                        # output block
     acc_ref, m_ref, l_ref,        # VMEM scratch (persist across kv steps)
@@ -45,6 +49,7 @@ def _flash_kernel(
     block_kv: int,
     num_kv_blocks: int,
 ):
+    b = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -57,9 +62,10 @@ def _flash_kernel(
     # absolute positions of this block's first query / key
     q0 = q_offset + iq * block_q
     k0 = ik * block_kv
+    kv_len = kv_len_ref[b]
 
     # block-level pruning: skip fully-masked blocks
-    run = jnp.bool_(True)
+    run = k0 < kv_len
     if causal:
         run &= k0 <= q0 + block_q - 1
     if window is not None and window > 0:
@@ -77,7 +83,7 @@ def _flash_kernel(
 
         qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
         kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
-        mask = jnp.ones((block_q, block_kv), dtype=bool)
+        mask = kpos < kv_len
         if causal:
             mask &= kpos <= qpos
         if window is not None and window > 0:
@@ -112,6 +118,7 @@ def flash_attention_pallas(
     causal: bool = True,
     window: Optional[int] = None,
     q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] valid kv length (pad mask)
     sm_scale: Optional[float] = None,
     block_q: int = 512,
     block_kv: int = 512,
@@ -130,6 +137,9 @@ def flash_attention_pallas(
     nq = Sq // block_q
     nkv = Skv // block_kv
 
+    if kv_len is None:
+        kv_len = jnp.full((B,), Skv, jnp.int32)   # every key valid
+
     kernel = functools.partial(
         _flash_kernel,
         sm_scale=scale,
@@ -141,20 +151,29 @@ def flash_attention_pallas(
         num_kv_blocks=nkv,
     )
 
-    return pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, Hq, nq, nkv),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
-            pl.BlockSpec((1, 1, block_kv, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, i, j, *_: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, h, i, j, *_: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, h, i, j, *_: (b, h // g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, i, j, *_: (b, h, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_q, Dh), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),
         ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(kv_len.astype(jnp.int32), q, k, v)

@@ -67,6 +67,7 @@ def xla_flash_attention(
     q: jnp.ndarray,               # [B, Sq, Hq, Dh]
     k: jnp.ndarray,               # [B, Skv, Hkv, Dh]
     v: jnp.ndarray,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] valid kv length (pad mask)
     *,
     causal: bool = True,
     window: Optional[int] = None,
@@ -114,7 +115,11 @@ def xla_flash_attention(
             mask &= kpos <= qpos
         if window is not None and window > 0:
             mask &= kpos > qpos - window
-        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+        mask = jnp.broadcast_to(mask[None], (B, bq, bk))
+        if kv_len is not None:
+            # per-row valid kv length: keys past kv_len[b] are padding
+            mask = mask & (kpos[None] < kv_len[:, None, None])
+        s = jnp.where(mask[:, :, None, :], s, -jnp.inf)
 
         mb = jax.lax.dynamic_slice_in_dim(m, i * bq, bq, axis=1)
         lb = jax.lax.dynamic_slice_in_dim(l, i * bq, bq, axis=1)
@@ -125,7 +130,7 @@ def xla_flash_attention(
         safe_m = jnp.where(jnp.isneginf(m_cur), 0.0, m_cur)
         alpha = jnp.where(jnp.isneginf(mb), 0.0, jnp.exp(mb - safe_m))
         p = jnp.exp(s - safe_m[..., None])
-        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        p = jnp.where(mask[:, :, None, :], p, 0.0)
         l_cur = lb * alpha + jnp.sum(p, axis=-1)
         a_cur = ab * alpha[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vb)
 
@@ -151,12 +156,19 @@ def attention(
     causal: bool = True,
     window: Optional[int] = None,
     q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] valid kv length (pad mask)
     sm_scale: Optional[float] = None,
     impl: str = DEFAULT_IMPL,
     block_q: int = 512,
     block_kv: int = 512,
 ) -> jnp.ndarray:
-    """Prefill / prefix-extend attention."""
+    """Prefill / prefix-extend attention.
+
+    ``kv_len`` [B] masks per-row KV padding: serving batches are bucket-
+    padded, so a document shorter than its bucket carries PAD keys past its
+    true length — with ``kv_len`` those keys are invisible to every query
+    (the prefill twin of the decode kernel's length mask).
+    """
     if impl == "stub":
         # near-zero-cost stand-in used by the dry-run to ATTRIBUTE HLO
         # flops/bytes to the attention op (delta vs the real lowering);
@@ -167,11 +179,11 @@ def attention(
     if impl == "naive":
         return ref.mha_reference(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
-            sm_scale=sm_scale,
+            kv_len=kv_len, sm_scale=sm_scale,
         )
     if impl == "xla":
         return xla_flash_attention(
-            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            q, k, v, kv_len, causal=causal, window=window, q_offset=q_offset,
             sm_scale=sm_scale, block_q=block_q, block_kv=block_kv,
         )
     if impl in ("pallas", "pallas_interpret"):
@@ -180,8 +192,8 @@ def attention(
         vt = jnp.swapaxes(v, 1, 2)
         out = flash_attention_pallas(
             qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
-            sm_scale=sm_scale, block_q=block_q, block_kv=block_kv,
-            interpret=(impl == "pallas_interpret"),
+            kv_len=kv_len, sm_scale=sm_scale, block_q=block_q,
+            block_kv=block_kv, interpret=(impl == "pallas_interpret"),
         )
         return jnp.swapaxes(out, 1, 2)
     raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,73 +1,174 @@
-"""Serving entry point: batched prefill + decode throughput demo.
+"""Serving entry point: continuous-batching cascade loop over an arrival
+stream.
 
-    python -m repro.launch.serve --arch qwen3-1.7b --batch 4 --prompt 128 --gen 16
+    python -m repro.launch.serve --docs 32 --rate 20 --batch 8
 
-Runs a reduced config on the host mesh; reports prefill/decode wall time.
-On TPU this is the serve loop the cascade engine drives per stage.
+Simulates a production document feed: Poisson arrivals are submitted to
+``serving.engine.CascadeEngine`` as they land on the wall clock, the
+request loop packs cross-stage launches between arrivals, and per-document
+latency (submit -> resolve) is reported as p50/p99 alongside throughput,
+KV-cache hit rate, evictions, and arena bytes.  ``--slot-budget`` exercises
+the arena memory-control path (preemption + re-prefill).
+
+The module also exports the stream driver (``poisson_arrivals`` /
+``drive_request_loop``) used by ``benchmarks/serve_engine.py``.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from ..config import resolve
 from ..configs import get_reduced
+from ..core.tasks import Cascade, Task, TaskConfig
+from ..data.documents import generate_corpus
+from ..data.tokenizer import HashWordTokenizer
 from ..models.model import LM
-from ..models.runtime import Runtime
-from ..models.whisper import WhisperModel
+from ..models.runtime import CPU_TEST
+from ..serving.engine import CascadeEngine, EngineResult, LMBackend
+
+
+def poisson_arrivals(doc_ids, rate: float, seed: int = 0
+                     ) -> Dict[int, float]:
+    """Arrival offsets (seconds from stream start) with exponential gaps."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, len(doc_ids))
+    return dict(zip(doc_ids, np.cumsum(gaps)))
+
+
+def drive_request_loop(
+    engine: CascadeEngine,
+    cascade: Cascade,
+    docs: Mapping[int, str],
+    arrivals: Mapping[int, float],
+    oracle_model: str = "oracle",
+) -> Tuple[EngineResult, float]:
+    """Run one streaming session against the wall clock.
+
+    Documents are submitted the moment their arrival offset elapses — i.e.
+    mid-cascade, between launches, not at stage boundaries — and the
+    engine steps whenever work is ready.  The *scheduled* arrival is
+    passed as the latency anchor (``arrival_ts``), so recorded latencies
+    include any queueing delay.  Returns (result, wall seconds).
+    """
+    engine.start(cascade, oracle_model)
+    order = sorted(docs, key=lambda d: (arrivals[d], d))
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(order) or engine.pending():
+        now = time.perf_counter() - t0
+        while i < len(order) and arrivals[order[i]] <= now:
+            d = order[i]
+            engine.submit(d, docs[d], arrival=arrivals[d],
+                          arrival_ts=t0 + arrivals[d])
+            i += 1
+        if engine.pending():
+            engine.step()
+        elif i < len(order):
+            time.sleep(min(arrivals[order[i]] - now, 0.05))
+    return engine.result(), time.perf_counter() - t0
+
+
+def warm_arena(engine: CascadeEngine, cascade: Cascade,
+               docs: Mapping[int, str], batch_size: int) -> None:
+    """Compile every launch signature streaming can produce.
+
+    The request loop dispatches partial groups as documents trickle in,
+    so padded batch widths 1, 2, 4, ... up to ``batch_size`` all occur —
+    a single full-batch ``run()`` only compiles full-width chunks and the
+    first narrow launch would otherwise pay its XLA compile inside the
+    timed/streamed pass.  Two subtleties make the warm runs deliberately
+    maximal: (1) thresholds are forced IMPOSSIBLE so every warm doc walks
+    every stage — real thresholds would let warm docs exit early and
+    leave late-stage survivor groups uncompiled; (2) each width runs the
+    WHOLE corpus, not a bucket-covering subset, because the arena pytree
+    rides through the jitted step and its CAPACITY (grown by doubling
+    with the live set) is part of the compiled shape — a subset warm
+    stops at a smaller capacity and the measured pass recompiles
+    everything the first time the arena doubles past it.
+    """
+    forced = Cascade([
+        Task(t.config, {c: 2.0 for c in range(engine.n_classes)})
+        for t in cascade.tasks])
+    orig = engine.batch_size
+    try:
+        bs = 1
+        while True:
+            engine.batch_size = min(bs, batch_size)
+            engine.run(forced, docs)
+            if bs >= batch_size:
+                break
+            bs *= 2
+    finally:
+        engine.batch_size = orig
+
+
+def build_engine(batch_size: int, slot_budget: Optional[int],
+                 retire_after: int, proxy_arch: str = "llama3_2_1b",
+                 oracle_arch: str = "qwen3_1_7b") -> CascadeEngine:
+    """Tiny untrained proxy/oracle backends (mechanics demo, CPU-friendly)."""
+    tokz = HashWordTokenizer(vocab_size=512)
+
+    def mk(name, arch, seed, rate):
+        cfg = get_reduced(arch, dtype="float32", vocab_size=512, num_layers=2)
+        m = LM(resolve(cfg, tp=1), CPU_TEST)
+        return LMBackend(name=name, model=m,
+                         params=m.init(jax.random.PRNGKey(seed)),
+                         tokenizer=tokz, rate_per_token=rate,
+                         slot_budget=slot_budget, retire_after=retire_after)
+
+    ops = {
+        "o_orig": "does this opinion overturn a lower court decision",
+        "sur_court": "is any lower court mentioned overturn reversed vacated",
+    }
+    backends = {"proxy": mk("proxy", proxy_arch, 1, 0.15e-6),
+                "oracle": mk("oracle", oracle_arch, 2, 2.50e-6)}
+    return CascadeEngine(backends, ops, n_classes=2, batch_size=batch_size)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=128)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--docs", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean Poisson arrivals per second")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slot-budget", type=int, default=None,
+                    help="per-backend live-slot cap (eviction pressure)")
+    ap.add_argument("--retire-after", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch, dtype="float32", vocab_size=2048)
-    rcfg = resolve(cfg, tp=1)
-    rt = Runtime(attn_impl="xla", remat=False)
-    model = LM(rcfg, rt) if cfg.family != "audio" else WhisperModel(rcfg, rt)
-    params = model.init(jax.random.PRNGKey(0))
+    engine = build_engine(args.batch, args.slot_budget, args.retire_after)
+    cascade = Cascade([
+        Task(TaskConfig("proxy", "sur_court", 0.25), {0: 0.6, 1: 0.6}),
+        Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.65, 1: 0.65}),
+    ])
+    corpus = generate_corpus(args.docs, avg_lines=12, seed=args.seed)
+    docs = {d.doc_id: d.text for d in corpus}
+    arrivals = poisson_arrivals(sorted(docs), args.rate, args.seed)
 
-    B, S = args.batch, args.prompt
-    s_alloc = S + args.gen
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 9,
-                              cfg.vocab_size)
-    batch = {"tokens": toks}
-    if cfg.family == "audio":
-        batch["frame_emb"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model))
+    # warm pass compiles every launch signature; the timed pass streams
+    warm_arena(engine, cascade, docs, args.batch)
+    res, wall = drive_request_loop(engine, cascade, docs, arrivals)
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, s_alloc=s_alloc))
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    logits, states = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    pos = jnp.full((B,), S, jnp.int32)
-    nxt = jnp.argmax(logits, -1)
-    out_tokens = [nxt]
-    t1 = time.time()
-    for i in range(args.gen):
-        logits, states = decode(params, nxt, states, pos + i)
-        nxt = jnp.argmax(logits, -1)
-        out_tokens.append(nxt)
-    nxt.block_until_ready()
-    t_decode = time.time() - t1
-
-    print(f"arch={cfg.name} (reduced) B={B} prompt={S} gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.0f} ms "
-          f"({B * S / max(t_prefill, 1e-9):.0f} tok/s incl. compile)")
-    print(f"decode:  {t_decode*1e3:.0f} ms "
-          f"({B * args.gen / max(t_decode, 1e-9):.0f} tok/s incl. compile)")
-    print("sample token ids:", [int(t[0]) for t in out_tokens[:8]])
+    stats = res.stats
+    n = len(res.pred)
+    exits = [res.exit_stage[d] for d in res.pred]
+    print(f"streamed {n} docs in {wall:.2f}s "
+          f"({n / max(wall, 1e-9):.1f} docs/s; arrival rate {args.rate}/s)")
+    print(f"latency p50 {1e3 * stats.latency_quantile(0.5):.0f} ms  "
+          f"p99 {1e3 * stats.latency_quantile(0.99):.0f} ms")
+    print(f"launches {stats.batches}; cache hit rate "
+          f"{stats.cache_hit_rate():.1%}; evictions {stats.evictions}; "
+          f"retired buckets {stats.retired_buckets}")
+    print(f"exit stages: " + ", ".join(
+        f"{s}:{exits.count(s)}" for s in sorted(set(exits))))
+    print(f"cost ${res.cost * 1e3:.4f}m; arena bytes " + ", ".join(
+        f"{m}={be.arena_nbytes():,}" for m, be in engine.backends.items()))
 
 
 if __name__ == "__main__":

@@ -109,6 +109,8 @@ def attention_apply(
     cache: Optional[Dict[str, jnp.ndarray]] = None,
     cache_len: Optional[jnp.ndarray] = None,   # [B] int32 valid cache entries
     q_offset: int = 0,               # static, mode=extend
+    kv_len: Optional[jnp.ndarray] = None,      # [B] true (unpadded) length
+                                               # incl. this chunk, mode=extend
     want_cache: bool = False,
     qk_norm: bool = False,
     theta: float = 10_000.0,
@@ -175,8 +177,9 @@ def attention_apply(
             # (measured 17+ GB/layer/chip on gemma3 prefill_32k; see
             # EXPERIMENTS.md §Perf iteration 1).
             out = ops.attention(
-                q, k, v, causal=causal, window=window, impl=rt.attn_impl,
-                sm_scale=sm_scale, block_q=rt.block_q, block_kv=rt.block_kv,
+                q, k, v, causal=causal, window=window, kv_len=kv_len,
+                impl=rt.attn_impl, sm_scale=sm_scale, block_q=rt.block_q,
+                block_kv=rt.block_kv,
             )
             if want_cache:
                 Wn = cache["k"].shape[1]
@@ -196,11 +199,6 @@ def attention_apply(
             # slot index and current absolute offset.
             Wn = cache["k"].shape[1]
             slot = jnp.arange(Wn)[None, :]                       # [1, W]
-            base = q_offset - Wn
-            kpos = jnp.where(
-                slot < (q_offset % Wn), slot + (q_offset // Wn) * Wn,
-                slot + base - (base % Wn) if False else slot,
-            )
             # exact slot->pos map: pos = largest p < q_offset with p% W == slot
             kpos = slot + ((q_offset - 1 - slot) // Wn) * Wn
             k_all = jnp.concatenate([cache["k"], k], axis=1)
@@ -212,6 +210,8 @@ def attention_apply(
             valid = (kpos_all[:, None, :] <= qpos) & \
                     (kpos_all[:, None, :] > qpos - window) & \
                     (kpos_all[:, None, :] >= 0)
+            if kv_len is not None:
+                valid &= kpos_all[:, None, :] < kv_len[:, None, None]
             g = q.shape[2] // k_all.shape[2]
             kf = jnp.repeat(k_all.astype(jnp.float32), g, axis=2)
             vf = jnp.repeat(v_all.astype(jnp.float32), g, axis=2)
@@ -233,32 +233,38 @@ def attention_apply(
             out = ops.attention(
                 q, ck[:, :kv_valid] if kv_valid < ck.shape[1] else ck,
                 cv[:, :kv_valid] if kv_valid < cv.shape[1] else cv,
-                causal=causal, q_offset=q_offset, impl=rt.attn_impl,
-                sm_scale=sm_scale, block_q=rt.block_q, block_kv=rt.block_kv,
+                causal=causal, q_offset=q_offset, kv_len=kv_len,
+                impl=rt.attn_impl, sm_scale=sm_scale, block_q=rt.block_q,
+                block_kv=rt.block_kv,
             )
             if want_cache:
                 new_cache = {"k": ck, "v": cv}
     elif mode == "decode":
         assert cache is not None and cache_len is not None and S == 1
+        # decode masks by cache_len (valid cache entries); a per-row
+        # kv_len override is an extend-only contract — reject it loudly
+        # rather than silently ignoring it
+        assert kv_len is None, "kv_len is mode='extend' only; decode " \
+            "masks by cache_len"
         if window is not None and window > 0:
             Wn = cache["k"].shape[1]
             slots = (positions[:, 0] % Wn)
             bidx = jnp.arange(B)
             ck = cache["k"].at[bidx, slots].set(k[:, 0])
             cv = cache["v"].at[bidx, slots].set(v[:, 0])
-            kv_len = jnp.minimum(cache_len + 1, Wn)
+            kv_valid = jnp.minimum(cache_len + 1, Wn)
         else:
             bidx = jnp.arange(B)
             ck = cache["k"].at[bidx, cache_len].set(k[:, 0])
             cv = cache["v"].at[bidx, cache_len].set(v[:, 0])
-            kv_len = cache_len + 1
+            kv_valid = cache_len + 1
         if rt.sp_decode and rt.mesh is not None and window in (None, 0):
             from ..distributed.collectives import sp_decode_attention
             out1 = sp_decode_attention(
-                q[:, 0], ck, cv, kv_len, mesh=rt.mesh, sm_scale=sm_scale)
+                q[:, 0], ck, cv, kv_valid, mesh=rt.mesh, sm_scale=sm_scale)
         else:
             out1 = ops.decode_attention(
-                q[:, 0], ck, cv, kv_len, sm_scale=sm_scale,
+                q[:, 0], ck, cv, kv_valid, sm_scale=sm_scale,
                 impl=rt.attn_impl, block_kv=rt.block_kv,
             )
         out = out1[:, None]

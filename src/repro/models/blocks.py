@@ -177,6 +177,7 @@ def block_apply(
     state: Optional[Any] = None,
     cache_len: Optional[jnp.ndarray] = None,
     q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,      # [B] true length, mode=extend
     positions: Optional[jnp.ndarray] = None,
     positions3: Optional[jnp.ndarray] = None,
     dp_spec=None,
@@ -202,6 +203,7 @@ def block_apply(
             cache=state,
             cache_len=cache_len,
             q_offset=q_offset,
+            kv_len=kv_len,
             want_cache=(mode != "train"),
             qk_norm=b.qk_norm,
             theta=b.rope_theta,

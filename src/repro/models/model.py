@@ -214,7 +214,7 @@ class LM:
 
     # ------------------------------------------------------------------ core
     def _run_blocks(self, params, x, *, mode, states=None, cache_len=None,
-                    q_offset=0, positions=None, positions3=None):
+                    q_offset=0, kv_len=None, positions=None, positions3=None):
         rcfg, rt = self.rcfg, self.rt
         dp_spec = self._dp_spec()
         pattern = self.pattern
@@ -229,7 +229,7 @@ class LM:
                 x, ns, a = blocks.block_apply(
                     stage_params[pi], x, kind=kind, rcfg=rcfg, rt=rt,
                     mode=mode, state=st, cache_len=cache_len,
-                    q_offset=q_offset, positions=positions,
+                    q_offset=q_offset, kv_len=kv_len, positions=positions,
                     positions3=positions3, dp_spec=dp_spec)
                 x = self._constrain_act(x)
                 new_states.append(ns)
@@ -278,7 +278,8 @@ class LM:
             x, ns, a = blocks.block_apply(
                 params["tail"][ti], x, kind=kind, rcfg=rcfg, rt=rt,
                 mode=mode, state=st, cache_len=cache_len, q_offset=q_offset,
-                positions=positions, positions3=positions3, dp_spec=dp_spec)
+                kv_len=kv_len, positions=positions, positions3=positions3,
+                dp_spec=dp_spec)
             x = self._constrain_act(x)
             new_tail.append(ns)
             aux = aux + a
@@ -341,14 +342,22 @@ class LM:
         return logits, new_states
 
     def extend(self, params, batch: Dict[str, jnp.ndarray], states,
-               q_offset: int):
-        """Cascade fraction-extension: new tokens at [q_offset, q_offset+S)."""
+               q_offset: int, kv_len: Optional[jnp.ndarray] = None):
+        """Cascade fraction-extension: new tokens at [q_offset, q_offset+S).
+
+        ``kv_len`` [B] is the TRUE (unpadded) sequence length including this
+        chunk: keys at positions >= kv_len[b] are bucket PAD and masked for
+        every query, so padded rows cannot attend to PAD KV written by
+        earlier chunks (the serving engine passes per-document true lengths;
+        None keeps the unmasked fast path for exact-length callers).
+        """
         x = self.embed_inputs(params, batch)
         B, S, _ = x.shape
         positions = q_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         x, new_states, _ = self._run_blocks(
             params, x, mode="extend", states=states, q_offset=q_offset,
-            positions=positions, positions3=batch.get("positions3"),
+            kv_len=kv_len, positions=positions,
+            positions3=batch.get("positions3"),
             cache_len=jnp.full((B,), q_offset, jnp.int32))
         x = rmsnorm_apply(params["final_norm"], x[:, -1:],
                           self.rcfg.base.norm_eps)

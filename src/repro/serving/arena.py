@@ -9,14 +9,23 @@ and scatter writes from padding land harmlessly in scratch.
 
 Slot lifecycle
 --------------
-  alloc   first time a document's bucket is touched by any stage;
+  alloc   first time a document's bucket is touched by any launch;
   fill    ``extend`` writes the fraction slice [cached_len, f_len) into the
           slot (cached_len == 0 is prefill-into-arena);
-  reuse   later stages gather the slot, extend the suffix, scatter back —
+  reuse   later launches gather the slot, extend the suffix, scatter back —
           operation suffixes are decoded against a *gathered copy* and
           dropped, so the document prefix in the arena stays pristine;
   free    the document exits the cascade; the slot returns to the free
-          list and may be re-issued to a new document (streaming).
+          list and may be re-issued to a new document (streaming);
+  evict   under slot-budget pressure the backend preempts the lowest-
+          priority live slot (``LMBackend.evict_for_room``): the slot is
+          freed exactly like an exit and the document re-enters the
+          request queue with ``cached_len = 0`` — its next launch
+          re-prefills over the recycled slot (``clear_slot``);
+  retire  a bucket whose live-slot count stays zero for ``retire_after``
+          launches is dropped wholesale (``LMBackend.retire``): the arena
+          pytree is released so a drifting length mix does not pin device
+          memory.  ``nbytes()`` is the byte accounting used by the budget.
 
 The arena grows by doubling (device-side zero-pad concat) when a bucket's
 live set exceeds capacity; growth preserves slot contents, so it is safe

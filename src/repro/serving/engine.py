@@ -1,4 +1,5 @@
-"""Cascade execution engine over real JAX models (slot-arena data plane).
+"""Cascade execution engine: a continuous-batching request loop over real
+JAX models (slot-arena data plane).
 
 This is the data-plane twin of ``core.cost_model``: the paper's API prompt
 caching becomes PHYSICAL KV-prefix reuse.  Documents ride *before*
@@ -12,33 +13,57 @@ operations in the token stream, so
     state (op suffixes decode against a gathered *copy* of the slot states
     and are dropped), exactly mirroring the doc-before-op prompt layout.
 
-Arena layout & slot lifecycle
------------------------------
+Request loop
+------------
+The control plane is *continuous-batching*, not stage-synchronous:
+
+    engine.start(cascade)                  begin a serving session
+    engine.submit(doc_id, text, arrival)   admit a document (any time)
+    engine.step()                          dispatch ONE launch
+    engine.poll()                          collect newly resolved documents
+    engine.drain()                         step until idle -> EngineResult
+
+Every submitted document becomes a ``scheduler.DocRequest`` (stage cursor,
+arrival time, per-backend cached lengths, resolution status) in a single
+global ``scheduler.RequestQueue``.  ``step()`` pops the ready group whose
+head request is oldest — grouped by the static signature ``(backend,
+bucket, cached_len, op, f_len)`` across ALL stages — so a stage-0 prefill
+for a fresh arrival and a stage-2 decode-only launch for a veteran
+dispatch back-to-back without either cohort draining first.  Thresholds
+are applied per document against its own stage; survivors re-enter the
+queue with an advanced cursor.  ``run()`` is a thin batch wrapper:
+submit-everything + drain, with identical ``EngineResult`` semantics and
+$-accounting parity with ``core.cost_model``.
+
+Arena layout, slot lifecycle & memory control
+---------------------------------------------
 Per (backend, length bucket) the engine keeps one persistent
 ``arena.BucketArena``: a batched state pytree ``[n_slots + 1, ...,
 s_alloc, ...]`` (s_alloc = bucket + operation reserve; the extra row is
 scratch for batch padding).  A document is assigned a slot on first touch
-and keeps it until it exits the cascade, at which point the slot returns
-to the free list (``scheduler.SlotAllocator``).  Survivor compaction
-between stages is an index gather (``LM.take_states``) and a scatter back
-(``LM.put_states``) inside one jitted step — no per-document pytree
+and keeps it until it exits the cascade — unless the backend's
+``slot_budget`` is hit, in which case the lowest-priority (newest-arrival)
+live slot is PREEMPTED: its document re-enters the queue at its current
+stage with ``cached_len = 0`` and re-prefills as new tokens.  Buckets
+whose live-slot count stays zero for ``retire_after`` launches are retired
+(device arena freed), so a drifting length mix does not pin memory.
+Survivor compaction is an index gather (``LM.take_states``) and a scatter
+back (``LM.put_states``) inside one jitted step — no per-document pytree
 stacking/slicing on the host.
 
 Stage steps compile once per static signature ``(bucket, cached_len,
-new_len, op_len, batch)``: prefill-into-arena is the ``cached_len == 0``
-case of extend, fraction extension writes the suffix at a static offset,
-and the operation suffix runs as masked decode steps whose per-document
-``kv_len`` (true, unpadded prefix length) rides through
-``kernels/decode_attention.py``'s scalar-prefetch mask.  Because the op
-read is length-masked, mixed TRUE lengths within a bucket share one
-launch, and mixed CACHED lengths (documents that entered at different
-stages) split into per-offset launches instead of forcing the seed
-engine's whole-batch re-prefill.
+new_len, op_len, batch)`` — note: no stage index, so interleaved stages
+share compiled steps.  Prefill-into-arena is the ``cached_len == 0`` case
+of extend, fraction extension writes the suffix at a static offset with
+per-row true lengths masking bucket PAD out of the chunk
+(``kernels/flash_attention.py`` scalar-prefetch ``kv_len``), and the
+operation suffix runs as masked decode steps whose per-document ``kv_len``
+rides through ``kernels/decode_attention.py``.
 
-Token accounting (new vs cached, true unpadded counts) and per-stage $
-cost are recorded in ``ServeStats`` with the same rates as the analytical
-cost model, so engine costs are directly comparable to ``run_cascade`` in
-tests.
+Token accounting (new vs cached, true unpadded counts), per-stage $ cost,
+per-document latencies, evictions, and retired buckets are recorded in
+``ServeStats`` with the same rates as the analytical cost model, so engine
+costs are directly comparable to ``run_cascade`` in tests.
 """
 from __future__ import annotations
 
@@ -54,8 +79,8 @@ import numpy as np
 from ..core.tasks import Cascade
 from ..data.tokenizer import PAD, HashWordTokenizer, class_token
 from .arena import BucketArena
-from .scheduler import (ServeStats, SlotAllocator, fraction_len,
-                        pack_stage_batches)
+from .scheduler import (DocRequest, LaunchSpec, RequestQueue, ServeStats,
+                        SlotAllocator, fraction_len)
 
 
 def _pad_width(n: int) -> int:
@@ -79,9 +104,12 @@ class LMBackend:
     s_alloc: int = 4096
     op_reserve: int = 64             # suffix headroom past the bucket length
     init_slots: int = 8              # initial arena capacity per bucket
+    slot_budget: Optional[int] = None  # max live slots across buckets
+    retire_after: int = 64           # idle launches before bucket retirement
     _arenas: Dict[int, BucketArena] = field(default_factory=dict)
     _alloc: SlotAllocator = field(default_factory=SlotAllocator)
     _doc_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    _idle: Dict[int, int] = field(default_factory=dict)
     _step: Optional[Any] = None      # jitted stage step (lazy)
     host_overhead_s: float = 0.0     # pack/assembly/dispatch wall-clock
 
@@ -89,6 +117,7 @@ class LMBackend:
         self._arenas.clear()
         self._alloc.reset()
         self._doc_slot.clear()
+        self._idle.clear()
         self.host_overhead_s = 0.0
         # the jitted step closes over model only; its compile cache survives
 
@@ -101,11 +130,75 @@ class LMBackend:
         bucket, slot = bs
         return int(self._arenas[bucket].cached_len[slot])
 
+    def has_slot(self, doc_id: int) -> bool:
+        return doc_id in self._doc_slot
+
+    def live_slots(self) -> int:
+        return len(self._doc_slot)
+
+    def live_docs(self) -> List[int]:
+        return list(self._doc_slot)
+
     def release(self, doc_id: int) -> None:
-        """Free the document's slot (it exited the cascade)."""
+        """Free the document's slot (it exited the cascade or was evicted)."""
         bs = self._doc_slot.pop(doc_id, None)
         if bs is not None:
             self._alloc.release(bs[0], doc_id)
+
+    # ------------------------------------------------------- memory control
+    def arena_nbytes(self) -> int:
+        """Total device bytes pinned by this backend's arenas."""
+        return sum(ar.nbytes() for ar in self._arenas.values())
+
+    def evict_for_room(self, need_new: int, victims: Sequence[int]
+                       ) -> List[int]:
+        """Preempt slots until ``need_new`` allocations fit in the budget.
+
+        ``victims`` is the caller's priority order, lowest first (the
+        engine passes newest-arrival-first and excludes the launch being
+        packed).  Returns the evicted doc ids; the caller re-queues them
+        with ``cached_len = 0``.  Stops early when the victim list runs
+        out — the launch is then trimmed by the engine rather than
+        over-committing the arena.
+        """
+        evicted: List[int] = []
+        if self.slot_budget is None:
+            return evicted
+        for d in victims:
+            if self.live_slots() + need_new <= self.slot_budget:
+                break
+            if d in self._doc_slot:
+                self.release(d)
+                evicted.append(d)
+        return evicted
+
+    def note_launch(self) -> int:
+        """Bucket retirement hook, called once per engine step (on every
+        backend, so one that stops receiving launches still ticks).
+
+        A bucket whose live-slot count has been zero for ``retire_after``
+        consecutive ticks has drifted out of the workload's length mix:
+        its device arena is freed (``retire``).  Returns how many buckets
+        were retired.
+        """
+        retired = 0
+        for bucket in list(self._arenas):
+            if self._alloc.live(bucket) == 0:
+                self._idle[bucket] = self._idle.get(bucket, 0) + 1
+                if self._idle[bucket] >= self.retire_after:
+                    self.retire(bucket)
+                    retired += 1
+            else:
+                self._idle[bucket] = 0
+        return retired
+
+    def retire(self, bucket: int) -> None:
+        """Free an idle bucket's arena (no live slots)."""
+        assert self._alloc.live(bucket) == 0, \
+            f"bucket {bucket} retired with live slots"
+        self._arenas.pop(bucket, None)
+        self._alloc.retire_bucket(bucket)
+        self._idle.pop(bucket, None)
 
     def _arena(self, bucket: int) -> BucketArena:
         ar = self._arenas.get(bucket)
@@ -140,12 +233,14 @@ class LMBackend:
         model = self.model
 
         def step(params, arena_states, slots, new_tok, op_tok, kv_true,
-                 *, c_len: int, op_len: int):
+                 ext_true, *, c_len: int, op_len: int):
             st = model.take_states(arena_states, slots)
             if new_tok.shape[1] > 0:
-                # prefill (c_len == 0) / fraction-extend into the arena
+                # prefill (c_len == 0) / fraction-extend into the arena;
+                # ext_true = per-row REAL extent of cache + chunk, so
+                # bucket-PAD keys are invisible inside the chunk too
                 _, st = model.extend(params, {"tokens": new_tok}, st,
-                                     q_offset=c_len)
+                                     q_offset=c_len, kv_len=ext_true)
                 arena_states = model.put_states(arena_states, slots, st)
             # operation suffix: masked decode steps over the gathered COPY
             # (kv_true = per-doc TRUE prefix length -> pad KV is invisible;
@@ -181,17 +276,15 @@ class LMBackend:
         op_tokens: np.ndarray,
         n_classes: int,
     ) -> Tuple[np.ndarray, np.ndarray, int, int]:
-        """Run (op, fraction) over one bucket batch.
+        """Run (op, fraction) over one bucket batch (stage-synchronous API).
 
         Documents may carry heterogeneous cached prefixes: the batch is
         split into per-``cached_len`` launches (each reusing its cache)
         rather than re-prefilling everyone.  Returns (pred [B], conf [B],
         new_tokens, cached_tokens) with TRUE (unpadded) token counts for $
-        accounting.
+        accounting.  The request loop calls ``run_group`` directly (the
+        scheduler has already grouped by cached length).
         """
-        assert len(op_tokens) > 0, "operations must encode to >= 1 token"
-        assert len(op_tokens) <= self.op_reserve, \
-            f"operation longer than op_reserve ({len(op_tokens)})"
         B = len(doc_ids)
         f_len = fraction_len(bucket, fraction)
         pred = np.zeros(B, np.int64)
@@ -207,19 +300,28 @@ class LMBackend:
 
         for eff_c in sorted(groups):
             ids = groups[eff_c]
-            p, c, new_t, cached_t = self._run_group(
+            p, c, new_d, cached_d = self.run_group(
                 ids, doc_tokens, bucket, f_len, fraction, eff_c,
                 op_tokens, n_classes)
             for j, d in enumerate(ids):
                 pred[pos_of[d]] = p[j]
                 conf[pos_of[d]] = c[j]
-            new_true_total += new_t
-            cached_true_total += cached_t
+            new_true_total += int(new_d.sum())
+            cached_true_total += int(cached_d.sum())
         return pred, conf, new_true_total, cached_true_total
 
-    def _run_group(self, ids, doc_tokens, bucket, f_len, fraction, eff_c,
-                   op_tokens, n_classes):
-        """One static-signature launch: all ``ids`` share ``eff_c``."""
+    def run_group(self, ids, doc_tokens, bucket, f_len, fraction, eff_c,
+                  op_tokens, n_classes):
+        """One static-signature launch: all ``ids`` share ``eff_c``.
+
+        Returns (pred [B], conf [B], new_tokens [B], cached_tokens [B])
+        with PER-DOCUMENT true token counts, so the request loop can
+        attribute cost to each document's own stage even when a launch
+        mixes stages.
+        """
+        assert len(op_tokens) > 0, "operations must encode to >= 1 token"
+        assert len(op_tokens) <= self.op_reserve, \
+            f"operation longer than op_reserve ({len(op_tokens)})"
         t0 = time.perf_counter()
         arena = self._arena(bucket)
         slots = [self._slot_for(bucket, d, arena) for d in ids]
@@ -232,19 +334,21 @@ class LMBackend:
         slots_arr[:B] = slots
         new_tok = np.full((Bp, n_new), PAD, np.int32)
         kv_true = np.ones(Bp, np.int32)
-        new_true = 0
-        cached_true = 0
+        ext_true = np.ones(Bp, np.int32)
+        new_d = np.zeros(B, np.int64)
+        cached_d = np.zeros(B, np.int64)
         for i, d in enumerate(ids):
             toks = doc_tokens[d]
             slot = slots[i]
             if n_new > 0:
                 seg = toks[min(eff_c, len(toks)): min(f_len, len(toks))]
                 new_tok[i, : len(seg)] = seg
-                new_true += len(seg)
-                cached_true += min(eff_c, len(toks))
+                new_d[i] = len(seg)
+                cached_d[i] = min(eff_c, len(toks))
+                ext_true[i] = min(eff_c, len(toks)) + len(seg)
             else:
-                cached_true += min(int(arena.true_len[slot]),
-                                   self._true_len(toks, fraction))
+                cached_d[i] = min(int(arena.true_len[slot]),
+                                  self._true_len(toks, fraction))
             kv_true[i] = self._true_len(toks, fraction)
         self.host_overhead_s += time.perf_counter() - t0
 
@@ -254,7 +358,8 @@ class LMBackend:
         logits, new_states = self._step(
             self.params, arena.states, jnp.asarray(slots_arr),
             jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
-            jnp.asarray(kv_true), c_len=eff_c, op_len=op_len)
+            jnp.asarray(kv_true), jnp.asarray(ext_true),
+            c_len=eff_c, op_len=op_len)
         arena.states = new_states
         self.host_overhead_s += time.perf_counter() - t0   # async dispatch
 
@@ -265,7 +370,7 @@ class LMBackend:
                 arena.true_len[slot] = min(f_len, len(doc_tokens[d]))
         pred, conf = self.class_confidences(
             np.asarray(logits)[:B], n_classes)
-        return pred, conf, new_true + B * op_len, cached_true
+        return pred, conf, new_d + op_len, cached_d
 
     @staticmethod
     def _true_len(toks: np.ndarray, fraction: float) -> int:
@@ -282,9 +387,18 @@ class EngineResult:
     stage_cost: List[float] = field(default_factory=list)
 
 
+# stage-cursor entry: (model, op_id, fraction, threshold_vector-or-None)
+_StageEntry = Tuple[str, str, float, Optional[np.ndarray]]
+
+
 @dataclass
 class CascadeEngine:
-    """Executes a task cascade over documents with real backends."""
+    """Continuous-batching executor of task cascades over real backends.
+
+    ``start`` / ``submit`` / ``step`` / ``poll`` / ``drain`` is the
+    streaming API; ``run`` is the batch wrapper (submit everything, then
+    drain).  See the module docstring for the scheduling contract.
+    """
 
     backends: Dict[str, Any]                # "proxy"/"oracle" -> backend
     operations: Dict[str, str]              # op id -> operation text
@@ -292,6 +406,17 @@ class CascadeEngine:
     batch_size: int = 8
     _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
         default_factory=dict, repr=False)
+    # ---- serving-session state (valid between start() and the next start())
+    _stages: List[_StageEntry] = field(default_factory=list, repr=False)
+    _queue: RequestQueue = field(default_factory=RequestQueue, repr=False)
+    _reqs: Dict[int, DocRequest] = field(default_factory=dict, repr=False)
+    _tok: Dict[str, Dict[int, np.ndarray]] = field(
+        default_factory=dict, repr=False)
+    _stats: ServeStats = field(default_factory=ServeStats, repr=False)
+    _cost: float = field(default=0.0, repr=False)
+    _seq: int = field(default=0, repr=False)
+    _fresh: List[int] = field(default_factory=list, repr=False)
+    _started: bool = field(default=False, repr=False)
 
     def _op_tokens(self, backend, op_id: str) -> np.ndarray:
         key = (backend.name, op_id)
@@ -302,82 +427,204 @@ class CascadeEngine:
             self._op_tok_cache[key] = toks
         return toks
 
+    # ------------------------------------------------------------- lifecycle
+    def start(self, cascade: Cascade, oracle_model: str = "oracle") -> None:
+        """Begin a serving session: reset backends, clear the queue."""
+        self._stages = [
+            (t.config.model, t.config.operation, t.config.fraction,
+             t.threshold_vector(self.n_classes))
+            for t in cascade.tasks
+        ] + [(oracle_model, "o_orig", 1.0, None)]   # oracle fall-through
+        for be in self.backends.values():
+            be.reset()
+        self._queue.clear()
+        self._reqs = {}
+        self._tok = {m: {} for m in self.backends}
+        self._stats = ServeStats()
+        self._cost = 0.0
+        self._seq = 0
+        self._fresh = []
+        self._started = True
+
+    def _stage_config(self, stage: int) -> Tuple[str, str, float]:
+        model, op_id, fraction, _ = self._stages[stage]
+        return model, op_id, fraction
+
+    def submit(self, doc_id: int, text: str,
+               arrival: Optional[float] = None, stage: int = 0,
+               arrival_ts: Optional[float] = None) -> DocRequest:
+        """Admit a document into the serving session (streaming arrival).
+
+        ``arrival`` is the scheduling priority — any comparable float
+        (logical sequence numbers are fine); lower runs first.
+        ``arrival_ts`` is an absolute ``time.perf_counter()`` timestamp
+        anchoring the latency measurement — streaming drivers pass the
+        SCHEDULED arrival so pre-submit queueing counts; it defaults to
+        submit time.  ``arrival`` defaults to ``arrival_ts`` so priority
+        follows real arrival order when only timestamps are given.
+        ``stage`` lets pre-screened documents enter the cascade mid-way
+        (clamped to the oracle).
+        """
+        assert self._started, "call start(cascade) before submit()"
+        assert doc_id not in self._reqs, f"doc {doc_id} already submitted"
+        if arrival_ts is None:
+            arrival_ts = time.perf_counter()
+        if arrival is None:
+            arrival = arrival_ts
+        req = DocRequest(
+            doc_id=doc_id,
+            stage=min(max(int(stage), 0), len(self._stages) - 1),
+            arrival=arrival, seq=self._seq, arrival_ts=arrival_ts)
+        self._seq += 1
+        enc: Dict[int, np.ndarray] = {}     # backends often share a tokenizer
+        for m, be in self.backends.items():
+            ids = enc.get(id(be.tokenizer))
+            if ids is None:
+                ids = np.asarray(be.tokenizer.encode(text), np.int32)
+                enc[id(be.tokenizer)] = ids
+            self._tok[m][doc_id] = ids
+            req.tok_len[m] = len(ids)
+        self._reqs[doc_id] = req
+        self._queue.push(req)
+        return req
+
+    def pending(self) -> int:
+        """Documents admitted but not yet resolved."""
+        return len(self._queue)
+
+    # ------------------------------------------------------------ scheduling
+    def _make_room(self, be, launch: LaunchSpec) -> LaunchSpec:
+        """Enforce the backend's slot budget for one launch.
+
+        First preempts the lowest-priority (newest-arrival) live slots
+        outside the launch; if the budget still cannot host every new
+        allocation, the newest tail of the launch is deferred back to the
+        queue (at least one document always proceeds).
+        """
+        if getattr(be, "slot_budget", None) is None:
+            return launch
+        need = sum(1 for d in launch.doc_ids if not be.has_slot(d))
+        if be.live_slots() + need <= be.slot_budget:
+            return launch
+        protected = set(launch.doc_ids)
+        victims = sorted(
+            (d for d in be.live_docs() if d not in protected),
+            key=lambda d: self._reqs[d].key(), reverse=True)
+        for d in be.evict_for_room(need, victims):
+            req = self._reqs[d]
+            req.cached[be.name] = 0
+            req.evictions += 1
+            self._stats.evictions += 1
+        room = max(be.slot_budget - be.live_slots(), 0)
+        if need <= room:
+            return launch
+        # trim: keep the oldest prefix whose new allocations fit (>= 1 doc)
+        keep_ids: List[int] = []
+        keep_stages: List[int] = []
+        used = 0
+        for d, s in zip(launch.doc_ids, launch.stages):
+            cost = 0 if be.has_slot(d) else 1
+            if keep_ids and used + cost > room:
+                self._queue.push(self._reqs[d])     # defer to a later launch
+                continue
+            keep_ids.append(d)
+            keep_stages.append(s)
+            used += cost
+        return LaunchSpec(
+            model=launch.model, op_id=launch.op_id, fraction=launch.fraction,
+            bucket=launch.bucket, cached_len=launch.cached_len,
+            f_len=launch.f_len, doc_ids=tuple(keep_ids),
+            stages=tuple(keep_stages))
+
+    def step(self) -> List[int]:
+        """Dispatch one launch from the ready queue.
+
+        Returns the doc ids resolved by this step (may be empty).  No-op
+        when the queue is idle.
+        """
+        assert self._started, "call start(cascade) before step()"
+        launch = self._queue.next_launch(self._stage_config, self.batch_size)
+        if launch is None:
+            return []
+        be = self.backends[launch.model]
+        launch = self._make_room(be, launch)
+        ids = list(launch.doc_ids)
+        p, c, new_d, cached_d = be.run_group(
+            ids, self._tok[launch.model], launch.bucket, launch.f_len,
+            launch.fraction, launch.cached_len,
+            self._op_tokens(be, launch.op_id), self.n_classes)
+        now = time.perf_counter()
+        resolved: List[int] = []
+        for i, d in enumerate(ids):
+            req = self._reqs[d]
+            thr = self._stages[req.stage][3]
+            cost_d = (new_d[i] * be.rate_per_token
+                      + cached_d[i] * be.rate_per_token * be.cached_discount)
+            self._stats.record(req.stage, 1, int(new_d[i]), int(cached_d[i]),
+                               cost_d)
+            self._cost += cost_d
+            req.cached[be.name] = be.cached_len(d)
+            if thr is None or c[i] >= thr[p[i]]:
+                req.done = True
+                req.pred = int(p[i])
+                req.conf = float(c[i])
+                req.exit_stage = req.stage
+                for b in self.backends.values():
+                    if hasattr(b, "release"):
+                        b.release(d)
+                self._stats.latencies.append(max(now - req.arrival_ts, 0.0))
+                self._fresh.append(d)
+                resolved.append(d)
+            else:
+                req.stage += 1
+                self._queue.push(req)
+        self._stats.batches += 1
+        # retirement ticks on EVERY backend: one that stops receiving
+        # launches must still free arenas its drifted length mix pinned
+        for b in self.backends.values():
+            if hasattr(b, "note_launch"):
+                self._stats.retired_buckets += b.note_launch()
+        return resolved
+
+    def poll(self) -> Dict[int, Tuple[int, float, int]]:
+        """Results resolved since the last poll: doc -> (pred, conf, stage)."""
+        out = {d: (self._reqs[d].pred, self._reqs[d].conf,
+                   self._reqs[d].exit_stage)
+               for d in self._fresh}
+        self._fresh = []
+        return out
+
+    def drain(self) -> EngineResult:
+        """Step until the queue is idle; result covers the whole session."""
+        while len(self._queue):
+            self.step()
+        return self.result()
+
+    def result(self) -> EngineResult:
+        done = [r for r in self._reqs.values() if r.done]
+        return EngineResult(
+            pred={r.doc_id: r.pred for r in done},
+            conf={r.doc_id: r.conf for r in done},
+            exit_stage={r.doc_id: r.exit_stage for r in done},
+            cost=self._cost, stats=self._stats,
+            stage_cost=list(self._stats.stage_cost))
+
+    # -------------------------------------------------------- batch wrapper
     def run(self, cascade: Cascade, docs: Mapping[int, str],
             oracle_model: str = "oracle",
             enter_stage: Optional[Mapping[int, int]] = None) -> EngineResult:
         """docs: doc_id -> (already reordered) document text.
 
-        ``enter_stage`` (doc_id -> stage index) admits documents mid-run —
-        the streaming-arrival pattern.  Late entrants share buckets with
-        docs that already carry cached prefixes; the per-``cached_len``
-        launch split keeps the veterans' caches hot.  Stage indices are
-        clamped to the oracle stage, so every admitted document resolves.
+        Thin batch wrapper over the request loop: submit every document,
+        drain the queue.  ``enter_stage`` (doc_id -> stage index) admits
+        documents mid-cascade; stage indices are clamped to the oracle
+        stage, so every admitted document resolves.
         """
-        stats = ServeStats()
-        tok: Dict[str, Dict[int, np.ndarray]] = {m: {} for m in self.backends}
-        full_len: Dict[int, int] = {}
-        for m, be in self.backends.items():
-            be.reset()
-            for d, text in docs.items():
-                ids = np.asarray(be.tokenizer.encode(text), np.int32)
-                tok[m][d] = ids
-                full_len[d] = len(ids)
-        last_stage = len(cascade.tasks)          # oracle fallthrough index
         requested = dict(enter_stage or {})
-        enter_stage = {}
-        for d, s in requested.items():
+        for d in requested:
             if d not in docs:
                 raise KeyError(f"enter_stage doc {d!r} not in docs")
-            enter_stage[d] = min(max(int(s), 0), last_stage)
-
-        unresolved = [d for d in docs if enter_stage.get(d, 0) <= 0]
-        pred: Dict[int, int] = {}
-        conf: Dict[int, float] = {}
-        exit_stage: Dict[int, int] = {}
-        cost = 0.0
-
-        stages = list(cascade.tasks) + [None]        # None = oracle task
-        for si, task in enumerate(stages):
-            if si > 0:
-                unresolved.extend(
-                    d for d, s in enter_stage.items() if s == si)
-            if not unresolved:
-                continue
-            if task is None:
-                model, op_id, fraction, thr = oracle_model, "o_orig", 1.0, None
-            else:
-                model = task.config.model
-                op_id = task.config.operation
-                fraction = task.config.fraction
-                thr = task.threshold_vector(self.n_classes)
-            be = self.backends[model]
-            cached = {d: be.cached_len(d) if hasattr(be, "cached_len") else 0
-                      for d in unresolved}
-            batches = pack_stage_batches(
-                unresolved, full_len, cached, fraction, self.batch_size)
-            survivors = []
-            for sb in batches:
-                ids = list(sb.doc_ids)
-                p, c, new_t, cached_t = be.run_stage(
-                    ids, tok[model], sb.bucket, fraction,
-                    self._op_tokens(be, op_id), self.n_classes)
-                batch_cost = (
-                    new_t * be.rate_per_token
-                    + cached_t * be.rate_per_token * be.cached_discount)
-                stats.record(si, len(ids), new_t, cached_t, batch_cost)
-                stats.batches += 1
-                cost += batch_cost
-                for i, d in enumerate(ids):
-                    take = thr is None or c[i] >= thr[p[i]]
-                    if take:
-                        pred[d] = int(p[i])
-                        conf[d] = float(c[i])
-                        exit_stage[d] = si
-                        for b in self.backends.values():
-                            if hasattr(b, "release"):
-                                b.release(d)
-                    else:
-                        survivors.append(d)
-            unresolved = survivors
-        return EngineResult(pred, conf, exit_stage, cost, stats,
-                            stage_cost=list(stats.stage_cost))
+        self.start(cascade, oracle_model)
+        for d, text in docs.items():
+            self.submit(d, text, stage=requested.get(d, 0))
+        return self.drain()

@@ -1,19 +1,36 @@
-"""Serving scheduler: bucketed batching, slot allocation, batch packing.
+"""Serving scheduler: request lifecycle, the cross-stage ready queue,
+bucketed batching, slot allocation, batch packing.
 
 TPU serving wants a small set of compiled shapes.  Documents are grouped
-into power-of-two *length buckets* per cascade stage; within a bucket each
-document owns a **slot** in a persistent KV arena for its lifetime
-(``SlotAllocator``), so survivor compaction between stages is an index
-gather, not a pytree rebuild.
+into power-of-two *length buckets*; within a bucket each document owns a
+**slot** in a persistent KV arena for its lifetime (``SlotAllocator``), so
+survivor compaction between launches is an index gather, not a pytree
+rebuild.
 
-``pack_stage_batches`` is the cross-bucket packer: it walks every bucket in
-one pass and emits ``StageBatch`` launches grouped by the static step
-signature ``(bucket, cached_len)`` — documents that entered the cascade at
-different stages (different cached prefixes) land in different launches of
-the same bucket instead of forcing a whole-batch re-prefill.  Documents
-whose cached prefix already covers the requested fraction share a single
-decode-only launch per bucket regardless of how long their caches are
-(the per-document valid length rides in ``kv_len``, which is dynamic).
+Continuous batching rides on two pieces here:
+
+``DocRequest``
+    per-document lifecycle state — stage cursor, arrival time, per-backend
+    cached/tokenized lengths, resolution status, eviction count.  The
+    engine owns one per submitted document from ``submit()`` to
+    resolution.
+
+``RequestQueue``
+    the global ready queue.  ``next_launch`` packs the *entire* ready set
+    — every stage at once — into static-signature launches keyed by
+    ``(backend, bucket, cached_len, op, f_len)`` and pops the group whose
+    head document is oldest (FIFO head-of-line).  A stage-0 prefill for a
+    new arrival and a stage-2 decode for a veteran are just two groups in
+    the same queue: they dispatch back-to-back without either cohort
+    draining first, and both reuse the engine's compiled steps because the
+    static signature carries no stage index.
+
+``pack_stage_batches`` (the PR-1 stage-synchronous packer) is retained for
+per-stage scoring paths; it emits ``StageBatch`` launches grouped by
+``(bucket, cached_len)`` within one stage.  Documents whose cached prefix
+already covers the requested fraction share a single decode-only launch
+per bucket (the per-document valid length rides in ``kv_len``, which is
+dynamic).
 
 A straggler policy can migrate queued work between serving shards
 (distributed.fault.StragglerPolicy).
@@ -22,7 +39,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -60,6 +78,129 @@ def make_buckets(doc_ids: Iterable[int], lengths: Dict[int, int],
         for i in range(0, len(ids), batch_size):
             out.append((blen, ids[i: i + batch_size]))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle (continuous batching)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DocRequest:
+    """Per-document lifecycle state for the continuous-batching loop.
+
+    A request is created by ``CascadeEngine.submit`` and lives until the
+    document resolves (``done``).  ``stage`` is the cursor into the
+    cascade's stage list (len(tasks) == the oracle fall-through);
+    ``cached`` mirrors each backend's padded cached-prefix length so the
+    scheduler can compute launch signatures without touching arenas.
+    Eviction resets the victim backend's entry to 0 — the document re-
+    enters the queue at its current stage and re-prefills as new tokens.
+    """
+
+    doc_id: int
+    stage: int = 0                    # stage cursor
+    arrival: float = 0.0              # arrival order (scheduling priority)
+    seq: int = 0                      # admission order (tie-break)
+    arrival_ts: float = 0.0           # perf_counter latency anchor
+    tok_len: Dict[str, int] = field(default_factory=dict)   # backend -> len
+    cached: Dict[str, int] = field(default_factory=dict)    # backend -> pad len
+    pred: Optional[int] = None
+    conf: Optional[float] = None
+    exit_stage: Optional[int] = None
+    evictions: int = 0
+    done: bool = False
+
+    def key(self) -> Tuple[float, int]:
+        return (self.arrival, self.seq)
+
+
+@dataclass(frozen=True)
+class LaunchSpec:
+    """One dispatch of the request loop: all docs share the static step
+    signature ``(model, op_id, bucket, cached_len, f_len)`` regardless of
+    which cascade stage each is at (``stages`` is per-doc bookkeeping for
+    thresholds/accounting, not part of the compiled shape)."""
+
+    model: str
+    op_id: str
+    fraction: float
+    bucket: int
+    cached_len: int                   # static q_offset (== f_len: decode-only)
+    f_len: int
+    doc_ids: Tuple[int, ...]
+    stages: Tuple[int, ...]
+
+
+# (model, op_id, fraction) of a stage cursor
+StageConfig = Tuple[str, str, float]
+
+
+class RequestQueue:
+    """Global cross-stage ready queue for the continuous-batching loop.
+
+    Holds every unresolved, not-in-flight ``DocRequest``.  ``next_launch``
+    groups the whole ready set by static signature and pops up to
+    ``batch_size`` documents from the group whose head (oldest) request
+    has the smallest ``(arrival, seq)`` — head-of-line FIFO, so veterans
+    deep in the cascade are never starved by a stream of new arrivals,
+    while arrivals still batch together whenever they share a signature.
+    """
+
+    def __init__(self) -> None:
+        self._ready: Dict[int, DocRequest] = {}        # doc_id -> request
+
+    def __len__(self) -> int:
+        return len(self._ready)
+
+    def __contains__(self, doc_id: int) -> bool:
+        return doc_id in self._ready
+
+    def push(self, req: DocRequest) -> None:
+        """Admit a request (also how deferred/surviving requests return)."""
+        self._ready[req.doc_id] = req
+
+    def clear(self) -> None:
+        self._ready.clear()
+
+    def next_launch(
+        self,
+        stage_config: Callable[[int], StageConfig],
+        batch_size: int,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+    ) -> Optional[LaunchSpec]:
+        """Pop the next launch, or None when the queue is empty.
+
+        ``stage_config(stage) -> (model, op_id, fraction)`` maps a stage
+        cursor to its task configuration (the oracle fall-through
+        included).
+        """
+        if not self._ready:
+            return None
+        # one O(N) pass: bin by signature, tracking each group's head so
+        # only the SELECTED group is sorted (not every group every step)
+        groups: Dict[Tuple, List[DocRequest]] = {}
+        heads: Dict[Tuple, Tuple[float, int]] = {}
+        best_key = None
+        for req in self._ready.values():
+            model, op_id, fraction = stage_config(req.stage)
+            blen = bucket_len(req.tok_len[model], buckets)
+            f_len = fraction_len(blen, fraction)
+            eff_c = min(req.cached.get(model, 0), f_len)
+            key = (model, op_id, fraction, blen, eff_c, f_len)
+            groups.setdefault(key, []).append(req)
+            if key not in heads or req.key() < heads[key]:
+                heads[key] = req.key()
+                if best_key is None or heads[key] < heads[best_key]:
+                    best_key = key
+        model, op_id, fraction, blen, eff_c, f_len = best_key
+        take = sorted(groups[best_key], key=DocRequest.key)[:batch_size]
+        for req in take:
+            del self._ready[req.doc_id]
+        return LaunchSpec(
+            model=model, op_id=op_id, fraction=fraction, bucket=blen,
+            cached_len=eff_c, f_len=f_len,
+            doc_ids=tuple(r.doc_id for r in take),
+            stages=tuple(r.stage for r in take))
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +249,17 @@ class SlotAllocator:
 
     def live(self, bucket: int) -> int:
         return len(self._slot.get(bucket, {}))
+
+    def live_total(self) -> int:
+        return sum(len(s) for s in self._slot.values())
+
+    def retire_bucket(self, bucket: int) -> None:
+        """Drop all allocation state for an idle bucket (arena retired)."""
+        assert not self._slot.get(bucket), \
+            f"bucket {bucket} retired with live slots"
+        self._slot.pop(bucket, None)
+        self._free.pop(bucket, None)
+        self._high.pop(bucket, None)
 
     def reset(self) -> None:
         self._slot.clear()
@@ -178,6 +330,14 @@ class ServeStats:
     stage_cached_tokens: List[int] = field(default_factory=list)
     stage_cost: List[float] = field(default_factory=list)
     batches: int = 0
+    evictions: int = 0                 # slots preempted under budget pressure
+    retired_buckets: int = 0           # idle arenas freed (memory control)
+    latencies: List[float] = field(default_factory=list)   # submit->resolve s
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies), q))
 
     def record(self, stage: int, docs: int, new_tokens: int,
                cached_tokens: int, cost: float = 0.0) -> None:

@@ -52,6 +52,32 @@ def test_flash_attention_vs_ref(dtype, B, Sq, Skv, Hq, Hkv, Dh, causal,
                                atol=ATOL[dtype], rtol=1e-2)
 
 
+@pytest.mark.parametrize("q_off,causal", [(0, True), (32, True), (0, False)])
+def test_flash_attention_per_row_kv_len(q_off, causal):
+    """Per-row kv_len masks bucket PAD keys for every query (extend path)."""
+    B, Sq, Skv, Hq, Hkv, Dh = 3, 16, 64, 4, 2, 16
+    q, k, v = _mk_qkv(jax.random.PRNGKey(3), B, Sq, Skv, Hq, Hkv, Dh,
+                      jnp.float32)
+    kv_len = jnp.asarray([Skv, q_off + 5, 3], jnp.int32)
+    out_ref = ref.mha_reference(q, k, v, causal=causal, q_offset=q_off,
+                                kv_len=kv_len)
+    for impl in ("xla", "pallas_interpret"):
+        out = ops.attention(q, k, v, causal=causal, q_offset=q_off,
+                            kv_len=kv_len, impl=impl,
+                            block_q=16, block_kv=16)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(out_ref, np.float32),
+                                   atol=ATOL[jnp.float32], rtol=1e-2)
+    # row 0 masks nothing: must match the kv_len=None fast path bit-for-bit
+    out_none = ops.attention(q, k, v, causal=causal, q_offset=q_off,
+                             impl="xla", block_q=16, block_kv=16)
+    out_full = ops.attention(q, k, v, causal=causal, q_offset=q_off,
+                             kv_len=kv_len, impl="xla",
+                             block_q=16, block_kv=16)
+    np.testing.assert_array_equal(np.asarray(out_none)[0],
+                                  np.asarray(out_full)[0])
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,Hq,Hkv,Dh", [
     (2, 64, 4, 2, 16),

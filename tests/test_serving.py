@@ -1,4 +1,5 @@
-"""Serving engine: prefix reuse, exits, cost parity, scheduler buckets."""
+"""Serving engine: request loop, prefix reuse, eviction, cost parity,
+scheduler buckets + ready queue."""
 import math
 
 import jax
@@ -14,28 +15,36 @@ from repro.data.tokenizer import HashWordTokenizer
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
 from repro.serving.engine import CascadeEngine, LMBackend
-from repro.serving.scheduler import (ServeStats, bucket_len, make_buckets,
+from repro.serving.scheduler import (DocRequest, RequestQueue, ServeStats,
+                                     bucket_len, make_buckets,
                                      pack_stage_batches)
+
+
+def _mk_backend(name, seed, tokz, **kw):
+    cfg = get_reduced("llama3_2_1b", dtype="float32", vocab_size=512,
+                      num_layers=2)
+    rcfg = resolve(cfg, tp=1)
+    m = LM(rcfg, CPU_TEST)
+    return LMBackend(
+        name=name, model=m, params=m.init(jax.random.PRNGKey(seed)),
+        tokenizer=tokz,
+        rate_per_token=1.0 if name == "oracle" else 0.06, s_alloc=512, **kw)
+
+
+OPS = {"o_orig": "does this overturn a lower court decision",
+       "sur_1": "is a lower court mentioned"}
+
+
+def _mk_engine(batch_size=4, **backend_kw):
+    tokz = HashWordTokenizer(vocab_size=512)
+    backends = {"proxy": _mk_backend("proxy", 1, tokz, **backend_kw),
+                "oracle": _mk_backend("oracle", 2, tokz, **backend_kw)}
+    return CascadeEngine(backends, OPS, n_classes=2, batch_size=batch_size)
 
 
 @pytest.fixture(scope="module")
 def engine():
-    tokz = HashWordTokenizer(vocab_size=512)
-
-    def mk(name, seed):
-        cfg = get_reduced("llama3_2_1b", dtype="float32", vocab_size=512,
-                          num_layers=2)
-        rcfg = resolve(cfg, tp=1)
-        m = LM(rcfg, CPU_TEST)
-        return LMBackend(
-            name=name, model=m, params=m.init(jax.random.PRNGKey(seed)),
-            tokenizer=tokz,
-            rate_per_token=1.0 if name == "oracle" else 0.06, s_alloc=512)
-
-    backends = {"proxy": mk("proxy", 1), "oracle": mk("oracle", 2)}
-    ops = {"o_orig": "does this overturn a lower court decision",
-           "sur_1": "is a lower court mentioned"}
-    return CascadeEngine(backends, ops, n_classes=2, batch_size=4)
+    return _mk_engine()
 
 
 @pytest.fixture(scope="module")
@@ -200,3 +209,152 @@ def test_serve_stats_accounting():
     assert s.total_new_tokens() == 150
     assert s.total_cached_tokens() == 30
     assert 0 < s.cache_hit_rate() < 1
+    s.latencies = [0.1, 0.2, 0.3, 0.4]
+    assert s.latency_quantile(0.5) == pytest.approx(0.25)
+    assert s.latency_quantile(1.0) == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching request loop
+# ---------------------------------------------------------------------------
+
+LADDER = Cascade([
+    Task(TaskConfig("proxy", "sur_1", 0.25), {0: 0.7, 1: 0.7}),
+    Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.75, 1: 0.75}),
+])
+
+
+def test_request_loop_matches_run(engine, docs):
+    """run() is a thin wrapper over submit()/step()/poll()/drain(): driving
+    the loop by hand must produce identical preds/confs/cost."""
+    ref = engine.run(LADDER, docs)
+
+    engine.start(LADDER)
+    for i, (d, text) in enumerate(docs.items()):
+        engine.submit(d, text, arrival=float(i))
+    polled = {}
+    while engine.pending():
+        engine.step()
+        polled.update(engine.poll())
+    res = engine.result()
+    assert res.pred == ref.pred
+    assert res.exit_stage == ref.exit_stage
+    assert res.conf == ref.conf                      # bit-identical
+    assert res.cost == pytest.approx(ref.cost, rel=1e-12)
+    assert res.stats.stage_docs == ref.stats.stage_docs
+    assert res.stats.total_new_tokens() == ref.stats.total_new_tokens()
+    assert res.stats.total_cached_tokens() == ref.stats.total_cached_tokens()
+    # poll() delivered every resolution exactly once
+    assert {d: v[0] for d, v in polled.items()} == ref.pred
+    assert len(res.stats.latencies) == len(docs)
+
+
+def test_streaming_admission_mid_cascade(engine, docs):
+    """Late arrivals are admitted between launches (not at stage barriers)
+    and do not force veterans to re-prefill."""
+    ids = sorted(docs)
+    early, late = ids[: len(ids) // 2], ids[len(ids) // 2:]
+    ref = engine.run(LADDER, docs)                    # static baseline
+
+    engine.start(LADDER)
+    for d in early:
+        engine.submit(d, docs[d], arrival=0.0)
+    # a few launches with only the early cohort in flight
+    for _ in range(2):
+        engine.step()
+    mid_pending = engine.pending()
+    for d in late:
+        engine.submit(d, docs[d], arrival=1.0)
+    assert engine.pending() > mid_pending             # admitted mid-run
+    res = engine.drain()
+    assert set(res.pred) == set(docs)
+    assert res.pred == ref.pred
+    # identical per-document token work: no whole-batch re-prefill happened
+    assert res.stats.total_new_tokens() == ref.stats.total_new_tokens()
+    assert res.stats.total_cached_tokens() == ref.stats.total_cached_tokens()
+    assert res.stats.cache_hit_rate() >= ref.stats.cache_hit_rate()
+
+
+def test_eviction_requeues_and_resolves(docs):
+    """Under a tiny slot budget the newest-arrival slot is preempted; the
+    evicted document re-resolves correctly with its re-prefill counted as
+    new tokens."""
+    ids = sorted(docs)[:2]
+    sub = {d: docs[d] for d in ids}
+    thr = {0: 2.0, 1: 2.0}                            # nothing exits early
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+    ref_eng = _mk_engine(batch_size=1)
+    ref = ref_eng.run(ladder, sub)                    # unbudgeted baseline
+
+    eng = _mk_engine(batch_size=1, slot_budget=1)
+    a, b = ids
+    eng.start(ladder)
+    eng.submit(a, sub[a], arrival=0.0)
+    eng.step()                                        # a cached at stage 0
+    assert eng.backends["proxy"].cached_len(a) > 0
+    eng.submit(b, sub[b], arrival=-1.0)               # older -> higher prio
+    eng.step()                                        # launches b, evicts a
+    assert eng._stats.evictions >= 1
+    assert eng.backends["proxy"].cached_len(a) == 0   # cache gone
+    res = eng.drain()
+    assert set(res.pred) == {a, b}
+    assert res.pred == ref.pred
+    np.testing.assert_allclose(
+        [res.conf[d] for d in ids], [ref.conf[d] for d in ids], atol=1e-5)
+    # the evicted doc's re-prefill is billed as new tokens
+    assert res.stats.total_new_tokens() > ref.stats.total_new_tokens()
+    assert res.stats.evictions == eng._reqs[a].evictions >= 1
+
+
+def test_bucket_retirement_frees_arena():
+    """A bucket idle for ``retire_after`` launches releases its arena."""
+    eng = _mk_engine(batch_size=4, retire_after=1)
+    short = "alpha beta gamma delta"
+    long = " ".join(f"w{i} token" for i in range(60))
+    eng.start(Cascade([]))                            # oracle-only resolve
+    eng.submit(1, short, arrival=0.0)
+    eng.submit(2, long, arrival=1.0)
+    eng.step()                                        # short doc resolves
+    oracle = eng.backends["oracle"]
+    assert oracle.arena_nbytes() >= 0
+    res = eng.drain()                                 # long doc's launch sees
+    assert set(res.pred) == {1, 2}                    # the idle small bucket
+    assert res.stats.retired_buckets >= 1
+    small = bucket_len(len(oracle.tokenizer.encode(short)))
+    assert small not in oracle._arenas                # device arena freed
+
+
+def test_request_queue_head_of_line():
+    """next_launch groups by static signature across stages and pops the
+    group whose head request is oldest."""
+    cfg = {0: ("proxy", "op_a", 0.25), 1: ("proxy", "op_b", 1.0)}
+    q = RequestQueue()
+    # veteran at stage 1 (oldest), two fresh arrivals at stage 0
+    q.push(DocRequest(1, stage=1, arrival=0.0, seq=0,
+                      tok_len={"proxy": 30}, cached={"proxy": 8}))
+    q.push(DocRequest(2, stage=0, arrival=1.0, seq=1,
+                      tok_len={"proxy": 30}))
+    q.push(DocRequest(3, stage=0, arrival=2.0, seq=2,
+                      tok_len={"proxy": 30}))
+    first = q.next_launch(lambda s: cfg[s], batch_size=8)
+    assert first.doc_ids == (1,)                      # veteran first
+    assert (first.op_id, first.cached_len, first.f_len) == ("op_b", 8, 32)
+    second = q.next_launch(lambda s: cfg[s], batch_size=8)
+    assert second.doc_ids == (2, 3)                   # arrivals batched
+    assert (second.op_id, second.cached_len) == ("op_a", 0)
+    assert q.next_launch(lambda s: cfg[s], batch_size=8) is None
+
+
+def test_request_queue_merges_same_signature_across_stages():
+    """Docs at different stage cursors with the same static signature share
+    one launch (the stage index is bookkeeping, not a compiled shape)."""
+    cfg = {0: ("proxy", "op_a", 1.0), 1: ("proxy", "op_a", 1.0)}
+    q = RequestQueue()
+    q.push(DocRequest(1, stage=1, arrival=0.0, seq=0, tok_len={"proxy": 20}))
+    q.push(DocRequest(2, stage=0, arrival=1.0, seq=1, tok_len={"proxy": 20}))
+    launch = q.next_launch(lambda s: cfg[s], batch_size=8)
+    assert launch.doc_ids == (1, 2)
+    assert launch.stages == (1, 0)
