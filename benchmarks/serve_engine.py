@@ -22,6 +22,21 @@ control planes serve the stream —
     wave starts (the PR-1 control plane under streaming load);
   * ``legacy``: the seed engine driven in the same waves.
 
+Multi-tenant section (PR 4): N concurrent queries with DISTINCT cascades
+(overlapping launch signatures) served two ways —
+
+  * ``shared``: one ``CascadeServer``; every query registered on it,
+    documents from different queries merging into cross-query launches
+    over one shared arena pool;
+  * ``isolated``: N independent ``CascadeEngine``s, each with its own
+    backends (own KV arenas), each serving only its own query.
+
+A deterministic batch pass (same admission order both ways) checks exact
+per-query $-parity + matching predictions and measures batch occupancy
+(docs per launch) — the shared server packs partial per-query groups into
+fuller launches, so occupancy rises and launch count falls.  A wall-clock
+pass then streams N concurrent Poisson feeds for per-query p50/p99.
+
 Reports p50/p99 per-document latency (scheduled arrival -> resolution),
 docs/sec, cache-hit rate, and $-cost per control plane.  Engines are
 compile-warmed on the same corpus before the timed pass.
@@ -29,7 +44,8 @@ compile-warmed on the same corpus before the timed pass.
     PYTHONPATH=src python benchmarks/serve_engine.py --docs 512 \
         --stream-docs 96 --out BENCH_serve_engine.json
 
-``--smoke`` runs a tiny CPU workload and asserts non-empty stats (CI).
+``--smoke`` runs a tiny CPU workload (including a 2-query multi-tenant
+case, so CI exercises mixed-query launches) and asserts non-empty stats.
 """
 from __future__ import annotations
 
@@ -48,11 +64,11 @@ from repro.configs import get_reduced
 from repro.core.tasks import Cascade, Task, TaskConfig
 from repro.data.documents import generate_corpus
 from repro.data.tokenizer import HashWordTokenizer
-from repro.launch.serve import (drive_request_loop, poisson_arrivals,
-                                warm_arena)
+from repro.launch.serve import (drive_request_loop, drive_server,
+                                poisson_arrivals, warm_arena)
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
-from repro.serving.engine import CascadeEngine, LMBackend
+from repro.serving.engine import CascadeEngine, CascadeServer, LMBackend
 from repro.serving.legacy_engine import DictCacheLMBackend, SeedCascadeEngine
 
 OPS = {
@@ -202,6 +218,146 @@ def stream_waves(kind: str, cascade, docs, arrivals, tokz, models,
                           cost, batches)
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant section: N concurrent queries, shared server vs isolated
+# ---------------------------------------------------------------------------
+
+def tenant_cascades(n_tenants: int):
+    """Distinct per-tenant cascades with OVERLAPPING signatures: every
+    tenant opens with the same cheap screen (stage-0 launches merge) and
+    shares the oracle fall-through; stage 1 alternates between the
+    original and the surrogate operation.  Impossible thresholds keep the
+    token work deterministic, so occupancy/parity isolate scheduling."""
+    thr = {0: 2.0, 1: 2.0}
+    variants = [
+        Cascade([Task(TaskConfig("proxy", "sur_1", 0.25), thr),
+                 Task(TaskConfig("proxy", "o_orig", 1.0), thr)]),
+        Cascade([Task(TaskConfig("proxy", "sur_1", 0.25), thr),
+                 Task(TaskConfig("proxy", "sur_1", 1.0), thr)]),
+    ]
+    return [variants[k % len(variants)] for k in range(n_tenants)]
+
+
+def run_multi_tenant(docs, tokz, models, batch_size: int, rate: float,
+                     seed: int, n_tenants: int = 2):
+    """Shared ``CascadeServer`` vs per-query isolation, same workload.
+
+    Interactive replay (deterministic, untimed): one document per tenant
+    per tick, serve to idle between ticks — the interactive regime where
+    requests trickle in.  An ISOLATED engine can never batch across
+    queries, so every launch is width 1 (occupancy exactly 1.0); the
+    shared server merges same-tick arrivals and survivors whose static
+    signatures agree, so occupancy rises and launch count falls.
+    Per-query $-parity must be EXACT per document and predictions must
+    match the isolated engines'.  Streaming pass (wall clock): N
+    concurrent Poisson feeds on the shared server vs each feed served
+    alone, per-query p50/p99.
+    """
+    cascades = tenant_cascades(n_tenants)
+    ids = sorted(docs)
+    tdocs = [{d: docs[d] for d in ids[k::n_tenants]}
+             for k in range(n_tenants)]
+    order = [sorted(t) for t in tdocs]
+    arrivals = [poisson_arrivals(order[k], rate, seed + k)
+                for k in range(n_tenants)]
+
+    eng, _ = make_engine("arena", tokz, models, batch_size)
+    distinct = {tuple(t.config.key() for t in c.tasks): c for c in cascades}
+    for c in distinct.values():
+        warm_arena(eng, c, docs, batch_size)
+
+    # ---- isolated: each query served alone (own arenas, own queue)
+    iso_batch, iso_stream = [], []
+    for k in range(n_tenants):
+        eng.start(cascades[k])
+        for j, d in enumerate(order[k]):
+            eng.submit(d, tdocs[k][d], arrival=float(j))
+            while eng.pending():               # serve this tick to idle
+                eng.step()
+        iso_batch.append(eng.result())
+        sres, wall = drive_request_loop(eng, cascades[k], tdocs[k],
+                                        arrivals[k])
+        st = sres.stats
+        iso_stream.append(_stream_report(
+            len(tdocs[k]), wall, st.latencies, st.total_new_tokens(),
+            st.total_cached_tokens(), sres.cost, st.batches))
+    iso_launches = sum(r.stats.batches for r in iso_batch)
+    iso_docs = sum(sum(r.stats.stage_docs) for r in iso_batch)
+
+    # ---- shared: every query registered on ONE server over the SAME
+    # backends (compile caches carry over; arenas reset per session)
+    server = CascadeServer(eng.backends, OPS, n_classes=2,
+                           batch_size=batch_size)
+
+    def shared_session():
+        server.reset()
+        return [server.register(c) for c in cascades]
+
+    # interactive replay: the k-th tenant's j-th document arrives at tick
+    # j for every tenant; the server serves each tick to idle
+    handles = shared_session()
+    for j in range(max(len(o) for o in order)):
+        for k in range(n_tenants):
+            if j < len(order[k]):
+                handles[k].submit(order[k][j], tdocs[k][order[k][j]],
+                                  arrival=float(j))
+        while server.pending():
+            server.step()
+    out = server.drain()
+    shared_batch = [out[h.query_id] for h in handles]
+    shared_launches = server.stats().batches
+    shared_occupancy = server.occupancy()
+
+    pred_match = all(shared_batch[k].pred == iso_batch[k].pred
+                     for k in range(n_tenants))
+    cost_parity = all(shared_batch[k].doc_cost == iso_batch[k].doc_cost
+                      for k in range(n_tenants))
+
+    # streaming pass: N concurrent Poisson feeds, one wall clock
+    handles = shared_session()
+    streams = [(handles[k], tdocs[k], arrivals[k])
+               for k in range(n_tenants)]
+    results, wall = drive_server(server, streams)
+    shared_stream = []
+    for k, h in enumerate(handles):
+        st = results[h.query_id].stats
+        shared_stream.append(_stream_report(
+            len(tdocs[k]), wall, st.latencies, st.total_new_tokens(),
+            st.total_cached_tokens(), results[h.query_id].cost, st.batches))
+    stream_occupancy = server.occupancy()
+
+    iso_occupancy = iso_docs / max(iso_launches, 1)
+    return {
+        "n_tenants": n_tenants,
+        "docs_per_tenant": [len(t) for t in tdocs],
+        "rate_docs_per_s_per_tenant": round(rate, 3),
+        "interactive": {
+            "shared": {
+                "launches": shared_launches,
+                "occupancy": round(shared_occupancy, 3),
+                "per_query_cost": [round(r.cost, 4) for r in shared_batch],
+            },
+            "isolated": {
+                "launches": iso_launches,
+                "occupancy": round(iso_occupancy, 3),
+                "per_query_cost": [round(r.cost, 4) for r in iso_batch],
+            },
+            "pred_match": pred_match,
+            "doc_cost_parity_exact": cost_parity,
+            "launch_reduction": round(iso_launches
+                                      / max(shared_launches, 1), 2),
+            "occupancy_gain": round(shared_occupancy
+                                    / max(iso_occupancy, 1e-9), 2),
+        },
+        "streaming": {
+            "shared": {"wall_s": round(wall, 4),
+                       "occupancy": round(stream_occupancy, 3),
+                       "per_query": shared_stream},
+            "isolated": {"per_query": iso_stream},
+        },
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=512)
@@ -210,6 +366,8 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (docs/s); 0 = 0.6x the "
                          "arena engine's measured static throughput")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="concurrent queries in the multi-tenant section")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--out", default="BENCH_serve_engine.json")
     ap.add_argument("--smoke", action="store_true",
@@ -279,10 +437,26 @@ def main():
     report["streaming"] = streaming
     print("streaming summary:", json.dumps(streaming["summary"], indent=2))
 
+    # ---- multi-tenant: N concurrent queries, shared server vs isolation
+    print(f"== multi-tenant ({args.tenants} queries, shared server vs "
+          f"isolated) ==", flush=True)
+    mt = run_multi_tenant(stream_docs, tokz, models, args.batch_size,
+                          rate / args.tenants, args.seed,
+                          n_tenants=args.tenants)
+    report["multi_tenant"] = mt
+    print(json.dumps(mt["interactive"], indent=2), flush=True)
+
     if args.smoke:
         assert rl["latency_p50_ms"] > 0 and rl["new_tokens"] > 0
         assert rl["cache_hit_rate"] >= ss["cache_hit_rate"]
         assert aw["new_tokens"] == sw["new_tokens"]   # identical token work
+        # mixed-query launches: same preds and exact per-doc $ as isolated
+        # engines, at strictly better batch occupancy
+        mi = mt["interactive"]
+        assert mi["pred_match"]
+        assert mi["doc_cost_parity_exact"]
+        assert mi["shared"]["occupancy"] > mi["isolated"]["occupancy"]
+        assert mi["shared"]["launches"] < mi["isolated"]["launches"]
         print("smoke OK")
         return
 

@@ -63,6 +63,21 @@ class Cascade:
     def configs(self) -> List[TaskConfig]:
         return [t.config for t in self.tasks]
 
+    def stage_entries(
+        self, n_classes: int, oracle_model: str = ORACLE,
+        oracle_op: str = "o_orig",
+    ) -> List[Tuple[str, str, float, Optional[np.ndarray]]]:
+        """Serving-stage table: ``(model, op, fraction, thresholds|None)``
+        per task plus the implicit oracle fall-through (no thresholds, so
+        every document resolves).  This is what a serving query handle
+        walks its stage cursor over — the bridge between cascade
+        construction and the multi-tenant server."""
+        return [
+            (t.config.model, t.config.operation, t.config.fraction,
+             t.threshold_vector(n_classes))
+            for t in self.tasks
+        ] + [(oracle_model, oracle_op, 1.0, None)]
+
     def with_task(self, task: Task) -> "Cascade":
         return Cascade(self.tasks + [task])
 

@@ -1,23 +1,28 @@
-"""Serving entry point: continuous-batching cascade loop over an arrival
-stream.
+"""Serving entry point: multi-tenant continuous-batching cascade serving
+over concurrent arrival streams.
 
-    python -m repro.launch.serve --docs 32 --rate 20 --batch 8
+    python -m repro.launch.serve --docs 32 --rate 20 --batch 8 --tenants 2
 
-Simulates a production document feed: Poisson arrivals are submitted to
-``serving.engine.CascadeEngine`` as they land on the wall clock, the
-request loop packs cross-stage launches between arrivals, and per-document
-latency (submit -> resolve) is reported as p50/p99 alongside throughput,
-KV-cache hit rate, evictions, and arena bytes.  ``--slot-budget`` exercises
-the arena memory-control path (preemption + re-prefill).
+Simulates a production document feed: each tenant registers its own
+cascade on ONE shared ``serving.engine.CascadeServer`` and its Poisson
+arrivals are submitted as they land on the wall clock.  The request loop
+packs launches across stages AND across tenants (documents from different
+queries that share a static signature ride one launch), and per-tenant
+latency (submit -> resolve) is reported as p50/p99 alongside batch
+occupancy, KV-cache hit rate, evictions, and shared arena bytes.
+``--slot-budget`` / ``--byte-budget`` exercise the arena memory-control
+paths (preemption + re-prefill; bytes or slots, whichever binds first).
 
-The module also exports the stream driver (``poisson_arrivals`` /
-``drive_request_loop``) used by ``benchmarks/serve_engine.py``.
+The module also exports the stream drivers used by
+``benchmarks/serve_engine.py``: ``poisson_arrivals``,
+``drive_request_loop`` (single-query ``CascadeEngine``), and
+``drive_server`` (N concurrent streams on one server).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -29,7 +34,8 @@ from ..data.documents import generate_corpus
 from ..data.tokenizer import HashWordTokenizer
 from ..models.model import LM
 from ..models.runtime import CPU_TEST
-from ..serving.engine import CascadeEngine, EngineResult, LMBackend
+from ..serving.engine import (CascadeEngine, CascadeServer, EngineResult,
+                              LMBackend, QueryHandle)
 
 
 def poisson_arrivals(doc_ids, rate: float, seed: int = 0
@@ -73,6 +79,41 @@ def drive_request_loop(
     return engine.result(), time.perf_counter() - t0
 
 
+def drive_server(
+    server: CascadeServer,
+    streams: Sequence[Tuple[QueryHandle, Mapping[int, str],
+                            Mapping[int, float]]],
+) -> Tuple[Dict[int, EngineResult], float]:
+    """Run N concurrent query streams against the wall clock on ONE server.
+
+    ``streams`` is ``[(handle, docs, arrivals), ...]`` — every handle must
+    be registered on ``server``; arrival offsets share one time axis, so
+    the streams genuinely interleave and documents from different queries
+    merge into shared launches whenever their signatures agree.  The
+    SCHEDULED arrival anchors each latency measurement (pre-submit
+    queueing counts).  Returns ({query_id: EngineResult}, wall seconds).
+    """
+    events: List[Tuple[float, int, int, QueryHandle, str]] = []
+    for handle, docs, arrivals in streams:
+        for d in docs:
+            events.append((arrivals[d], handle.query_id, d, handle, docs[d]))
+    events.sort(key=lambda e: e[:3])
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(events) or server.pending():
+        now = time.perf_counter() - t0
+        while i < len(events) and events[i][0] <= now:
+            arr, _, d, handle, text = events[i]
+            handle.submit(d, text, arrival=arr, arrival_ts=t0 + arr)
+            i += 1
+        if server.pending():
+            server.step()
+        elif i < len(events):
+            time.sleep(min(events[i][0] - now, 0.05))
+    return ({h.query_id: h.result() for h, _, _ in streams},
+            time.perf_counter() - t0)
+
+
 def warm_arena(engine: CascadeEngine, cascade: Cascade,
                docs: Mapping[int, str], batch_size: int) -> None:
     """Compile every launch signature streaming can produce.
@@ -109,8 +150,14 @@ def warm_arena(engine: CascadeEngine, cascade: Cascade,
 
 def build_engine(batch_size: int, slot_budget: Optional[int],
                  retire_after: int, proxy_arch: str = "llama3_2_1b",
-                 oracle_arch: str = "qwen3_1_7b") -> CascadeEngine:
-    """Tiny untrained proxy/oracle backends (mechanics demo, CPU-friendly)."""
+                 oracle_arch: str = "qwen3_1_7b",
+                 byte_budget: Optional[int] = None) -> CascadeEngine:
+    """Tiny untrained proxy/oracle backends (mechanics demo, CPU-friendly).
+
+    Returns a ``CascadeEngine`` — which IS a ``CascadeServer``, so callers
+    can either drive the single-query compatibility API (``run``) or
+    ``register`` several queries on it.
+    """
     tokz = HashWordTokenizer(vocab_size=512)
 
     def mk(name, arch, seed, rate):
@@ -119,7 +166,8 @@ def build_engine(batch_size: int, slot_budget: Optional[int],
         return LMBackend(name=name, model=m,
                          params=m.init(jax.random.PRNGKey(seed)),
                          tokenizer=tokz, rate_per_token=rate,
-                         slot_budget=slot_budget, retire_after=retire_after)
+                         slot_budget=slot_budget, byte_budget=byte_budget,
+                         retire_after=retire_after)
 
     ops = {
         "o_orig": "does this opinion overturn a lower court decision",
@@ -130,45 +178,96 @@ def build_engine(batch_size: int, slot_budget: Optional[int],
     return CascadeEngine(backends, ops, n_classes=2, batch_size=batch_size)
 
 
+def tenant_cascades(n: int) -> List[Cascade]:
+    """``n`` distinct query cascades that still OVERLAP in signatures.
+
+    All tenants open with the same cheap surrogate screen (so their
+    stage-0 launches merge), then diverge: even tenants escalate to the
+    full-document original operation, odd tenants re-run the surrogate at
+    full length with tighter thresholds.  The oracle fall-through is
+    shared by construction.
+    """
+    out = []
+    for k in range(n):
+        if k % 2 == 0:
+            out.append(Cascade([
+                Task(TaskConfig("proxy", "sur_court", 0.25),
+                     {0: 0.6, 1: 0.6}),
+                Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.65, 1: 0.65}),
+            ]))
+        else:
+            out.append(Cascade([
+                Task(TaskConfig("proxy", "sur_court", 0.25),
+                     {0: 0.6, 1: 0.6}),
+                Task(TaskConfig("proxy", "sur_court", 1.0),
+                     {0: 0.7, 1: 0.7}),
+            ]))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", type=int, default=32)
+    ap.add_argument("--docs", type=int, default=32,
+                    help="documents per tenant stream")
     ap.add_argument("--rate", type=float, default=20.0,
-                    help="mean Poisson arrivals per second")
+                    help="mean Poisson arrivals per second, per tenant")
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="concurrent queries registered on one server")
     ap.add_argument("--slot-budget", type=int, default=None,
                     help="per-backend live-slot cap (eviction pressure)")
+    ap.add_argument("--byte-budget", type=int, default=None,
+                    help="per-backend arena byte cap (eviction pressure)")
     ap.add_argument("--retire-after", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    engine = build_engine(args.batch, args.slot_budget, args.retire_after)
-    cascade = Cascade([
-        Task(TaskConfig("proxy", "sur_court", 0.25), {0: 0.6, 1: 0.6}),
-        Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.65, 1: 0.65}),
-    ])
-    corpus = generate_corpus(args.docs, avg_lines=12, seed=args.seed)
+    server = build_engine(args.batch, args.slot_budget, args.retire_after,
+                          byte_budget=args.byte_budget)
+    cascades = tenant_cascades(args.tenants)
+
+    # one corpus, sliced into per-tenant streams on a shared time axis
+    corpus = generate_corpus(args.docs * args.tenants, avg_lines=12,
+                             seed=args.seed)
     docs = {d.doc_id: d.text for d in corpus}
-    arrivals = poisson_arrivals(sorted(docs), args.rate, args.seed)
+    ids = sorted(docs)
+    streams_docs = [{d: docs[d] for d in ids[k::args.tenants]}
+                    for k in range(args.tenants)]
 
-    # warm pass compiles every launch signature; the timed pass streams
-    warm_arena(engine, cascade, docs, args.batch)
-    res, wall = drive_request_loop(engine, cascade, docs, arrivals)
+    # warm pass compiles every launch signature any tenant can produce
+    # over the COMBINED corpus (arena capacity rides the compiled shape);
+    # tenants sharing a cascade signature share one warm pass
+    distinct = {tuple(t.config.key() for t in c.tasks): c for c in cascades}
+    for cascade in distinct.values():
+        warm_arena(server, cascade, docs, args.batch)
 
-    stats = res.stats
-    n = len(res.pred)
-    exits = [res.exit_stage[d] for d in res.pred]
-    print(f"streamed {n} docs in {wall:.2f}s "
-          f"({n / max(wall, 1e-9):.1f} docs/s; arrival rate {args.rate}/s)")
-    print(f"latency p50 {1e3 * stats.latency_quantile(0.5):.0f} ms  "
-          f"p99 {1e3 * stats.latency_quantile(0.99):.0f} ms")
-    print(f"launches {stats.batches}; cache hit rate "
-          f"{stats.cache_hit_rate():.1%}; evictions {stats.evictions}; "
-          f"retired buckets {stats.retired_buckets}")
-    print(f"exit stages: " + ", ".join(
-        f"{s}:{exits.count(s)}" for s in sorted(set(exits))))
-    print(f"cost ${res.cost * 1e3:.4f}m; arena bytes " + ", ".join(
-        f"{m}={be.arena_nbytes():,}" for m, be in engine.backends.items()))
+    server.reset()
+    handles = [server.register(c) for c in cascades]
+    streams = [
+        (h, sd, poisson_arrivals(sorted(sd), args.rate, args.seed + k))
+        for k, (h, sd) in enumerate(zip(handles, streams_docs))]
+    results, wall = drive_server(server, streams)
+
+    n = sum(len(r.pred) for r in results.values())
+    print(f"streamed {n} docs ({args.tenants} tenants x "
+          f"{args.docs}) in {wall:.2f}s ({n / max(wall, 1e-9):.1f} docs/s; "
+          f"arrival rate {args.rate}/s per tenant)")
+    for h in handles:
+        r = results[h.query_id]
+        st = r.stats
+        exits = [r.exit_stage[d] for d in r.pred]
+        print(f"  query {h.query_id}: p50 "
+              f"{1e3 * st.latency_quantile(0.5):.0f} ms  p99 "
+              f"{1e3 * st.latency_quantile(0.99):.0f} ms; "
+              f"cache hit {st.cache_hit_rate():.1%}; "
+              f"cost ${r.cost * 1e3:.4f}m; exit stages " + ", ".join(
+                  f"{s}:{exits.count(s)}" for s in sorted(set(exits))))
+    agg = server.stats()
+    print(f"server: {agg.batches} launches; occupancy "
+          f"{server.occupancy():.2f} docs/launch; evictions "
+          f"{agg.evictions}; retired buckets {agg.retired_buckets}")
+    print("arena bytes " + ", ".join(
+        f"{m}={be.arena_nbytes():,}" for m, be in server.backends.items()))
 
 
 if __name__ == "__main__":

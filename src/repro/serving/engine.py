@@ -1,5 +1,6 @@
-"""Cascade execution engine: a continuous-batching request loop over real
-JAX models (slot-arena data plane).
+"""Cascade serving: a long-lived multi-tenant ``CascadeServer`` running a
+continuous-batching request loop over real JAX models (slot-arena data
+plane).
 
 This is the data-plane twin of ``core.cost_model``: the paper's API prompt
 caching becomes PHYSICAL KV-prefix reuse.  Documents ride *before*
@@ -13,64 +14,83 @@ operations in the token stream, so
     state (op suffixes decode against a gathered *copy* of the slot states
     and are dropped), exactly mirroring the doc-before-op prompt layout.
 
-Request loop
-------------
-The control plane is *continuous-batching*, not stage-synchronous:
+Multi-tenant serving API
+------------------------
+One server owns the LM backends, their KV arenas, and the global
+``scheduler.RequestQueue``; many queries (cascades) are registered and
+served CONCURRENTLY over that shared substrate:
 
-    engine.start(cascade)                  begin a serving session
-    engine.submit(doc_id, text, arrival)   admit a document (any time)
-    engine.step()                          dispatch ONE launch
-    engine.poll()                          collect newly resolved documents
-    engine.drain()                         step until idle -> EngineResult
+    server = CascadeServer(backends, operations, n_classes)
+    handle = server.register(cascade, accuracy_target=0.9)   # QueryHandle
+    fut    = handle.submit(doc_id, text)                     # DocFuture
+    server.step()                            dispatch ONE launch (any query)
+    handle.poll()                            this query's fresh resolutions
+    handle.result() / server.stats(qid)      per-query results, stats, $
+    server.drain()                           step until idle (all queries)
 
-Every submitted document becomes a ``scheduler.DocRequest`` (stage cursor,
-arrival time, per-backend cached lengths, resolution status) in a single
-global ``scheduler.RequestQueue``.  ``step()`` pops the ready group whose
-head request is oldest — grouped by the static signature ``(backend,
-bucket, cached_len, op, f_len)`` across ALL stages — so a stage-0 prefill
-for a fresh arrival and a stage-2 decode-only launch for a veteran
-dispatch back-to-back without either cohort draining first.  Thresholds
-are applied per document against its own stage; survivors re-enter the
-queue with an advanced cursor.  ``run()`` is a thin batch wrapper:
-submit-everything + drain, with identical ``EngineResult`` semantics and
-$-accounting parity with ``core.cost_model``.
+Every submitted document becomes a ``scheduler.DocRequest`` carrying its
+owning ``query_id``; the stage cursor resolves ``(model, op, fraction)``
+through the handle's stage table.  Because the launch signature
+``(backend, bucket, cached_len, op, f_len)`` carries neither stage index
+nor query id, ``RequestQueue.next_launch`` packs ready documents ACROSS
+queries: a stage-0 prefill for query A and a stage-2 decode for query B
+merge into one launch whenever their static shapes agree, and mixed-query
+launches share compiled steps, op-token memos, and KV slots in one arena
+pool.  Results, ``ServeStats``, and $-accounting stay partitioned per
+query.  Which ready group dispatches next is a pluggable ``policy``
+(default ``scheduler.oldest_head_first``; admission is fair across
+queries because ``(arrival, seq)`` is server-global FIFO).
+
+``CascadeEngine`` survives as the single-query compatibility wrapper:
+``start(cascade)`` registers one query on a private session and
+``submit/step/poll/drain/run`` delegate to it — ``run()`` is bit-identical
+(preds, confs, per-document $) to the pre-server engine on static corpora.
 
 Arena layout, slot lifecycle & memory control
 ---------------------------------------------
-Per (backend, length bucket) the engine keeps one persistent
+Per (backend, length bucket) the server keeps one persistent
 ``arena.BucketArena``: a batched state pytree ``[n_slots + 1, ...,
 s_alloc, ...]`` (s_alloc = bucket + operation reserve; the extra row is
 scratch for batch padding).  A document is assigned a slot on first touch
-and keeps it until it exits the cascade — unless the backend's
-``slot_budget`` is hit, in which case the lowest-priority (newest-arrival)
-live slot is PREEMPTED: its document re-enters the queue at its current
-stage with ``cached_len = 0`` and re-prefills as new tokens.  Buckets
-whose live-slot count stays zero for ``retire_after`` launches are retired
-(device arena freed), so a drifting length mix does not pin memory.
+and keeps it until it exits its cascade — unless a backend budget binds.
+Budgets are dual: ``slot_budget`` caps live slots, ``byte_budget`` caps
+device bytes across the backend's arenas (projected via
+``arena_nbytes()`` + the growth the pending launch would force), and
+eviction triggers on whichever binds first.  Victims are chosen
+fewest-cached-tokens-lost first (newest arrival breaks ties): the evicted
+document re-enters the queue at its current stage with ``cached_len = 0``
+and re-prefills as new tokens.  Under byte pressure a bucket emptied by
+eviction is retired IMMEDIATELY (its arena freed); otherwise buckets
+whose live-slot count stays zero for ``retire_after`` launches are
+retired in the background, so a drifting length mix does not pin memory.
 Survivor compaction is an index gather (``LM.take_states``) and a scatter
 back (``LM.put_states``) inside one jitted step — no per-document pytree
 stacking/slicing on the host.
 
 Stage steps compile once per static signature ``(bucket, cached_len,
-new_len, op_len, batch)`` — note: no stage index, so interleaved stages
-share compiled steps.  Prefill-into-arena is the ``cached_len == 0`` case
-of extend, fraction extension writes the suffix at a static offset with
-per-row true lengths masking bucket PAD out of the chunk
-(``kernels/flash_attention.py`` scalar-prefetch ``kv_len``), and the
-operation suffix runs as masked decode steps whose per-document ``kv_len``
-rides through ``kernels/decode_attention.py``.
+new_len, op_len, batch)`` — note: no stage index and no query id, so
+interleaved stages AND interleaved queries share compiled steps.
+Prefill-into-arena is the ``cached_len == 0`` case of extend, fraction
+extension writes the suffix at a static offset with per-row true lengths
+masking bucket PAD out of the chunk (``kernels/flash_attention.py``
+scalar-prefetch ``kv_len``), and the operation suffix runs as masked
+decode steps whose per-document ``kv_len`` rides through
+``kernels/decode_attention.py``.
 
 Token accounting (new vs cached, true unpadded counts), per-stage $ cost,
-per-document latencies, evictions, and retired buckets are recorded in
-``ServeStats`` with the same rates as the analytical cost model, so engine
-costs are directly comparable to ``run_cascade`` in tests.
+per-document latencies, evictions, and retired buckets are recorded in a
+per-query ``ServeStats`` with the same rates as the analytical cost
+model, so engine costs are directly comparable to ``run_cascade`` in
+tests; ``server.stats()`` aggregates across queries (launches counted
+once, however many queries shared them).
 """
 from __future__ import annotations
 
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -79,8 +99,8 @@ import numpy as np
 from ..core.tasks import Cascade
 from ..data.tokenizer import PAD, HashWordTokenizer, class_token
 from .arena import BucketArena
-from .scheduler import (DocRequest, LaunchSpec, RequestQueue, ServeStats,
-                        SlotAllocator, fraction_len)
+from .scheduler import (DocRequest, LaunchSpec, RequestQueue, SchedulingPolicy,
+                        ServeStats, SlotAllocator, StageConfig, fraction_len)
 
 
 def _pad_width(n: int) -> int:
@@ -90,7 +110,7 @@ def _pad_width(n: int) -> int:
 
 @dataclass
 class LMBackend:
-    """A model + params behind the engine, with a slot-based KV arena."""
+    """A model + params behind the server, with a slot-based KV arena."""
 
     name: str
     model: Any                       # models.model.LM (or compatible)
@@ -105,12 +125,15 @@ class LMBackend:
     op_reserve: int = 64             # suffix headroom past the bucket length
     init_slots: int = 8              # initial arena capacity per bucket
     slot_budget: Optional[int] = None  # max live slots across buckets
+    byte_budget: Optional[int] = None  # max device bytes across arenas
     retire_after: int = 64           # idle launches before bucket retirement
     _arenas: Dict[int, BucketArena] = field(default_factory=dict)
     _alloc: SlotAllocator = field(default_factory=SlotAllocator)
     _doc_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
     _idle: Dict[int, int] = field(default_factory=dict)
+    _slot_nbytes: Dict[int, int] = field(default_factory=dict)
     _step: Optional[Any] = None      # jitted stage step (lazy)
+    pressure_retired: int = 0        # buckets freed mid-eviction (byte budget)
     host_overhead_s: float = 0.0     # pack/assembly/dispatch wall-clock
 
     def reset(self) -> None:
@@ -118,6 +141,7 @@ class LMBackend:
         self._alloc.reset()
         self._doc_slot.clear()
         self._idle.clear()
+        self.pressure_retired = 0
         self.host_overhead_s = 0.0
         # the jitted step closes over model only; its compile cache survives
 
@@ -129,6 +153,15 @@ class LMBackend:
             return 0
         bucket, slot = bs
         return int(self._arenas[bucket].cached_len[slot])
+
+    def true_cached_len(self, doc_id: int) -> int:
+        """TRUE (unpadded) cached tokens of ``doc_id`` — what an eviction
+        would actually lose (and re-bill as new tokens)."""
+        bs = self._doc_slot.get(doc_id)
+        if bs is None:
+            return 0
+        bucket, slot = bs
+        return int(self._arenas[bucket].true_len[slot])
 
     def has_slot(self, doc_id: int) -> bool:
         return doc_id in self._doc_slot
@@ -150,30 +183,117 @@ class LMBackend:
         """Total device bytes pinned by this backend's arenas."""
         return sum(ar.nbytes() for ar in self._arenas.values())
 
-    def evict_for_room(self, need_new: int, victims: Sequence[int]
-                       ) -> List[int]:
-        """Preempt slots until ``need_new`` allocations fit in the budget.
+    def slot_nbytes(self, bucket: int) -> int:
+        """Device bytes one arena row of ``bucket`` pins.
+
+        Computed from state SHAPES (``jax.eval_shape`` semantics — nothing
+        is materialized), so the byte budget can project the cost of a
+        bucket whose arena does not exist yet.
+        """
+        n = self._slot_nbytes.get(bucket)
+        if n is None:
+            shapes = self.model.state_shapes(1, self._s_alloc_for(bucket))
+            n = sum(int(math.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                    for l in jax.tree.leaves(shapes))
+            self._slot_nbytes[bucket] = n
+        return n
+
+    def _initial_capacity(self, bucket: int) -> int:
+        """Capacity a NEW arena for ``bucket`` opens with: ``init_slots``,
+        shrunk to what the byte budget can host beside existing arenas
+        (>= 1 — a single slot always proceeds, even over budget)."""
+        cap = self.init_slots
+        if self.byte_budget is not None:
+            s = self.slot_nbytes(bucket)
+            avail = (self.byte_budget - self.arena_nbytes()) // s - 1
+            cap = min(cap, avail)
+        return max(cap, 1)
+
+    def projected_nbytes(self, bucket: int, need_new: int) -> int:
+        """Arena bytes after ``bucket`` grows to host ``need_new`` more
+        slots (free-list reuse, budget-capped initial capacity, and
+        capacity doubling modelled exactly)."""
+        total = self.arena_nbytes()
+        free = self._alloc.high_water(bucket) - self._alloc.live(bucket)
+        grow_to = self._alloc.high_water(bucket) + max(need_new - free, 0)
+        ar = self._arenas.get(bucket)
+        if ar is None:
+            if need_new <= 0:
+                return total
+            rows_now, new_cap = 0, self._initial_capacity(bucket)
+        else:
+            rows_now, new_cap = ar.capacity + 1, ar.capacity
+        while new_cap < grow_to:
+            new_cap *= 2
+        return total + ((new_cap + 1) - rows_now) * self.slot_nbytes(bucket)
+
+    def over_budget(self, bucket: int, need_new: int) -> bool:
+        """Would hosting ``need_new`` fresh slots in ``bucket`` bust either
+        budget?  Slots and bytes are checked independently — eviction
+        triggers on whichever binds first."""
+        if (self.slot_budget is not None
+                and self.live_slots() + need_new > self.slot_budget):
+            return True
+        if (self.byte_budget is not None
+                and self.projected_nbytes(bucket, need_new) > self.byte_budget):
+            return True
+        return False
+
+    def admissible_new(self, bucket: int, need: int) -> int:
+        """Largest prefix of ``need`` fresh allocations both budgets can
+        host (>= 1: a single document always proceeds, so launches cannot
+        livelock under an impossibly small budget)."""
+        k = need
+        while k > 1 and self.over_budget(bucket, k):
+            k -= 1
+        return k
+
+    def evict_for_room(self, bucket: int, need_new: int,
+                       victims: Sequence[int]) -> List[int]:
+        """Preempt slots until ``need_new`` allocations for ``bucket`` fit
+        both budgets.
 
         ``victims`` is the caller's priority order, lowest first (the
-        engine passes newest-arrival-first and excludes the launch being
-        packed).  Returns the evicted doc ids; the caller re-queues them
-        with ``cached_len = 0``.  Stops early when the victim list runs
-        out — the launch is then trimmed by the engine rather than
-        over-committing the arena.
+        server passes fewest-cached-tokens-lost first, newest arrival
+        breaking ties, and excludes the launch being packed).  Returns the
+        evicted doc ids; the caller re-queues them with ``cached_len = 0``.
+        Under byte pressure a bucket emptied by eviction is retired
+        immediately (``pressure_retired`` counts them for stats) — slot
+        recycling alone frees no bytes, dropping the arena does.  Stops
+        early when the victim list runs out — the launch is then trimmed
+        by the server rather than over-committing the arena.
         """
         evicted: List[int] = []
-        if self.slot_budget is None:
+        if self.slot_budget is None and self.byte_budget is None:
             return evicted
         for d in victims:
-            if self.live_slots() + need_new <= self.slot_budget:
+            if not self.over_budget(bucket, need_new):
                 break
-            if d in self._doc_slot:
-                self.release(d)
-                evicted.append(d)
+            bs = self._doc_slot.get(d)
+            if bs is None:
+                continue
+            vb = bs[0]
+            slot_over = (self.slot_budget is not None
+                         and self.live_slots() + need_new > self.slot_budget)
+            if not slot_over:
+                # byte pressure alone: a same-bucket victim only helps by
+                # avoiding GROWTH (freed slots are recycled; releasing
+                # them frees no bytes).  An arena already irreducibly
+                # over budget must not thrash its residents' caches.
+                grows = (self.projected_nbytes(bucket, need_new)
+                         > self.arena_nbytes())
+                if vb == bucket and not grows:
+                    continue
+            self.release(d)
+            evicted.append(d)
+            if (self.byte_budget is not None and vb != bucket
+                    and vb in self._arenas and self._alloc.live(vb) == 0):
+                self.retire(vb)
+                self.pressure_retired += 1
         return evicted
 
     def note_launch(self) -> int:
-        """Bucket retirement hook, called once per engine step (on every
+        """Bucket retirement hook, called once per server step (on every
         backend, so one that stops receiving launches still ticks).
 
         A bucket whose live-slot count has been zero for ``retire_after``
@@ -200,19 +320,22 @@ class LMBackend:
         self._alloc.retire_bucket(bucket)
         self._idle.pop(bucket, None)
 
+    def _s_alloc_for(self, bucket: int) -> int:
+        s_alloc = bucket + self.op_reserve
+        impl = getattr(self.model.rt, "attn_impl", "")
+        if impl.startswith("pallas"):
+            # keep the decode kernel's cache axis a block multiple so
+            # ops.decode_attention never pads K/V copies per step
+            blk = getattr(self.model.rt, "block_kv", 512)
+            if s_alloc > blk:           # <= blk is always a single block
+                s_alloc = -(-s_alloc // blk) * blk
+        return s_alloc
+
     def _arena(self, bucket: int) -> BucketArena:
         ar = self._arenas.get(bucket)
         if ar is None:
-            s_alloc = bucket + self.op_reserve
-            impl = getattr(self.model.rt, "attn_impl", "")
-            if impl.startswith("pallas"):
-                # keep the decode kernel's cache axis a block multiple so
-                # ops.decode_attention never pads K/V copies per step
-                blk = getattr(self.model.rt, "block_kv", 512)
-                if s_alloc > blk:       # <= blk is always a single block
-                    s_alloc = -(-s_alloc // blk) * blk
-            ar = BucketArena(self.model, bucket, s_alloc,
-                             capacity=self.init_slots)
+            ar = BucketArena(self.model, bucket, self._s_alloc_for(bucket),
+                             capacity=self._initial_capacity(bucket))
             self._arenas[bucket] = ar
         return ar
 
@@ -316,8 +439,8 @@ class LMBackend:
 
         Returns (pred [B], conf [B], new_tokens [B], cached_tokens [B])
         with PER-DOCUMENT true token counts, so the request loop can
-        attribute cost to each document's own stage even when a launch
-        mixes stages.
+        attribute cost to each document's own stage and query even when a
+        launch mixes stages or registered queries.
         """
         assert len(op_tokens) > 0, "operations must encode to >= 1 token"
         assert len(op_tokens) <= self.op_reserve, \
@@ -385,38 +508,171 @@ class EngineResult:
     cost: float
     stats: ServeStats
     stage_cost: List[float] = field(default_factory=list)
+    doc_cost: Dict[int, float] = field(default_factory=dict)
 
 
-# stage-cursor entry: (model, op_id, fraction, threshold_vector-or-None)
+# stage-table entry: (model, op_id, fraction, threshold_vector-or-None)
 _StageEntry = Tuple[str, str, float, Optional[np.ndarray]]
 
 
 @dataclass
-class CascadeEngine:
-    """Continuous-batching executor of task cascades over real backends.
+class DocFuture:
+    """Resolution handle for one submitted document.
 
-    ``start`` / ``submit`` / ``step`` / ``poll`` / ``drain`` is the
-    streaming API; ``run`` is the batch wrapper (submit everything, then
-    drain).  See the module docstring for the scheduling contract.
+    ``handle.submit`` returns one; it stays live until the server resolves
+    the document (``done``), after which ``pred``/``conf``/``exit_stage``/
+    ``cost`` are populated.  ``result()`` steps the server until this
+    document resolves (other queries' work is served along the way — the
+    future never bypasses the scheduler).
+    """
+
+    query_id: int
+    doc_id: int                       # the CALLER's id (ext_id)
+    _req: DocRequest = field(repr=False)
+    _server: "CascadeServer" = field(repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self._req.done
+
+    @property
+    def pred(self) -> Optional[int]:
+        return self._req.pred
+
+    @property
+    def conf(self) -> Optional[float]:
+        return self._req.conf
+
+    @property
+    def exit_stage(self) -> Optional[int]:
+        return self._req.exit_stage
+
+    @property
+    def cost(self) -> float:
+        return self._req.cost
+
+    @property
+    def evictions(self) -> int:
+        return self._req.evictions
+
+    def result(self) -> Tuple[int, float, int]:
+        """Block (stepping the server) until resolved: (pred, conf, stage)."""
+        while not self._req.done:
+            assert self._server.pending(), \
+                "server idle before this document resolved"
+            self._server.step()
+        return self._req.pred, self._req.conf, self._req.exit_stage
+
+
+@dataclass
+class QueryHandle:
+    """One registered query's view of a ``CascadeServer``.
+
+    Returned by ``server.register(cascade, ...)``.  ``submit`` admits
+    documents into the SHARED request queue (they may merge into launches
+    with other queries' documents); ``poll``/``result``/``stats``/``cost``
+    are partitioned to this query.  ``accuracy_target`` is the caller's
+    declared accuracy floor (the alpha the cascade was assembled for) —
+    recorded for admission/monitoring; the thresholds baked into the
+    cascade are what enforce it.
+    """
+
+    query_id: int
+    stages: List[_StageEntry] = field(repr=False)
+    _server: "CascadeServer" = field(repr=False)
+    accuracy_target: Optional[float] = None
+
+    def stage_config(self, stage: int) -> StageConfig:
+        model, op_id, fraction, _ = self.stages[stage]
+        return model, op_id, fraction
+
+    def submit(self, doc_id: int, text: str,
+               arrival: Optional[float] = None, stage: int = 0,
+               arrival_ts: Optional[float] = None) -> DocFuture:
+        """Admit a document into this query (streaming arrival).
+
+        ``arrival`` is the scheduling priority — any comparable float
+        (logical sequence numbers are fine); lower runs first, ACROSS
+        queries.  ``arrival_ts`` is an absolute ``time.perf_counter()``
+        timestamp anchoring the latency measurement — streaming drivers
+        pass the SCHEDULED arrival so pre-submit queueing counts; it
+        defaults to submit time.  ``arrival`` defaults to ``arrival_ts``
+        so priority follows real arrival order when only timestamps are
+        given.  ``stage`` lets pre-screened documents enter the cascade
+        mid-way (clamped to the oracle).  Document ids are scoped to the
+        query: two queries may both submit a document ``7``.
+        """
+        return self._server._submit(self, doc_id, text, arrival=arrival,
+                                    stage=stage, arrival_ts=arrival_ts)
+
+    def pending(self) -> int:
+        """This query's documents admitted but not yet resolved."""
+        return self._server.pending(self.query_id)
+
+    def poll(self) -> Dict[int, Tuple[int, float, int]]:
+        """This query's results resolved since the last poll:
+        doc -> (pred, conf, exit_stage)."""
+        return self._server._poll_query(self.query_id)
+
+    def result(self) -> EngineResult:
+        """Everything this query has resolved so far (per-query stats/$)."""
+        return self._server.result(self.query_id)
+
+    def drain(self) -> EngineResult:
+        """Step the server until THIS query is idle (other queries' work
+        is served along the way), then return its result."""
+        while self.pending():
+            self._server.step()
+        return self.result()
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._server.stats(self.query_id)
+
+    @property
+    def cost(self) -> float:
+        return self._server.cost(self.query_id)
+
+
+@dataclass
+class CascadeServer:
+    """Long-lived multi-tenant executor of task cascades over shared
+    backends.
+
+    ``register`` / ``handle.submit`` / ``step`` / ``poll`` / ``drain`` is
+    the serving API; the server owns the backends, their KV arenas, and
+    one global request queue, and serves every registered query
+    concurrently.  See the module docstring for the scheduling contract.
     """
 
     backends: Dict[str, Any]                # "proxy"/"oracle" -> backend
     operations: Dict[str, str]              # op id -> operation text
     n_classes: int
     batch_size: int = 8
+    policy: Optional[SchedulingPolicy] = None   # None = oldest_head_first
     _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
         default_factory=dict, repr=False)
-    # ---- serving-session state (valid between start() and the next start())
-    _stages: List[_StageEntry] = field(default_factory=list, repr=False)
+    # ---- serving state (shared queue; per-query partitions keyed by qid)
+    _handles: Dict[int, QueryHandle] = field(default_factory=dict, repr=False)
     _queue: RequestQueue = field(default_factory=RequestQueue, repr=False)
-    _reqs: Dict[int, DocRequest] = field(default_factory=dict, repr=False)
+    _requests: Dict[int, DocRequest] = field(default_factory=dict, repr=False)
+    _ids: Dict[Tuple[int, int], int] = field(default_factory=dict, repr=False)
     _tok: Dict[str, Dict[int, np.ndarray]] = field(
         default_factory=dict, repr=False)
-    _stats: ServeStats = field(default_factory=ServeStats, repr=False)
-    _cost: float = field(default=0.0, repr=False)
+    _query_stats: Dict[int, ServeStats] = field(
+        default_factory=dict, repr=False)
+    _departed: ServeStats = field(default_factory=ServeStats, repr=False)
+    _query_cost: Dict[int, float] = field(default_factory=dict, repr=False)
+    _fresh: Dict[int, List[int]] = field(default_factory=dict, repr=False)
+    _pending: Dict[int, int] = field(default_factory=dict, repr=False)
+    _launches: int = field(default=0, repr=False)
+    _retired: int = field(default=0, repr=False)
     _seq: int = field(default=0, repr=False)
-    _fresh: List[int] = field(default_factory=list, repr=False)
-    _started: bool = field(default=False, repr=False)
+    _next_qid: int = field(default=0, repr=False)
+
+    def __post_init__(self) -> None:
+        if not self._tok:
+            self._tok = {m: {} for m in self.backends}
 
     def _op_tokens(self, backend, op_id: str) -> np.ndarray:
         key = (backend.name, op_id)
@@ -428,94 +684,157 @@ class CascadeEngine:
         return toks
 
     # ------------------------------------------------------------- lifecycle
-    def start(self, cascade: Cascade, oracle_model: str = "oracle") -> None:
-        """Begin a serving session: reset backends, clear the queue."""
-        self._stages = [
-            (t.config.model, t.config.operation, t.config.fraction,
-             t.threshold_vector(self.n_classes))
-            for t in cascade.tasks
-        ] + [(oracle_model, "o_orig", 1.0, None)]   # oracle fall-through
+    def reset(self) -> None:
+        """Drop every query and in-flight request; reset backends/arenas.
+
+        Compiled stage steps and op-token memos survive (they close over
+        models and operation text only).
+        """
         for be in self.backends.values():
             be.reset()
         self._queue.clear()
-        self._reqs = {}
+        self._handles.clear()
+        self._requests.clear()
+        self._ids.clear()
         self._tok = {m: {} for m in self.backends}
-        self._stats = ServeStats()
-        self._cost = 0.0
+        self._query_stats.clear()
+        self._departed = ServeStats()
+        self._query_cost.clear()
+        self._fresh.clear()
+        self._pending.clear()
+        self._launches = 0
+        self._retired = 0
         self._seq = 0
-        self._fresh = []
-        self._started = True
+        self._next_qid = 0
 
-    def _stage_config(self, stage: int) -> Tuple[str, str, float]:
-        model, op_id, fraction, _ = self._stages[stage]
-        return model, op_id, fraction
+    def register(self, cascade: Cascade,
+                 accuracy_target: Optional[float] = None,
+                 oracle_model: str = "oracle",
+                 oracle_op: str = "o_orig") -> QueryHandle:
+        """Register a query (cascade) for serving; returns its handle.
 
-    def submit(self, doc_id: int, text: str,
-               arrival: Optional[float] = None, stage: int = 0,
-               arrival_ts: Optional[float] = None) -> DocRequest:
-        """Admit a document into the serving session (streaming arrival).
-
-        ``arrival`` is the scheduling priority — any comparable float
-        (logical sequence numbers are fine); lower runs first.
-        ``arrival_ts`` is an absolute ``time.perf_counter()`` timestamp
-        anchoring the latency measurement — streaming drivers pass the
-        SCHEDULED arrival so pre-submit queueing counts; it defaults to
-        submit time.  ``arrival`` defaults to ``arrival_ts`` so priority
-        follows real arrival order when only timestamps are given.
-        ``stage`` lets pre-screened documents enter the cascade mid-way
-        (clamped to the oracle).
+        Backends and arenas are NOT reset — registration is cheap and
+        concurrent queries share the serving substrate.  The oracle
+        fall-through (``oracle_model``, ``oracle_op``, f=1, no
+        thresholds) is appended so every submitted document resolves.
         """
-        assert self._started, "call start(cascade) before submit()"
-        assert doc_id not in self._reqs, f"doc {doc_id} already submitted"
+        qid = self._next_qid
+        self._next_qid += 1
+        handle = QueryHandle(
+            query_id=qid,
+            stages=cascade.stage_entries(self.n_classes, oracle_model,
+                                         oracle_op),
+            _server=self, accuracy_target=accuracy_target)
+        self._handles[qid] = handle
+        self._query_stats[qid] = ServeStats()
+        self._query_cost[qid] = 0.0
+        self._fresh[qid] = []
+        self._pending[qid] = 0
+        return handle
+
+    def unregister(self, handle: QueryHandle) -> None:
+        """Withdraw a query and free its bookkeeping (results included —
+        read ``handle.result()`` first).  Asserts the query is idle:
+        drain it before unregistering.  The query's contribution to the
+        server-wide aggregate (``stats()``/``occupancy()``) is retained —
+        launch history does not shrink when a tenant departs."""
+        qid = handle.query_id
+        assert self._pending.get(qid, 0) == 0, \
+            "unregister with documents pending; drain the query first"
+        gone = self._query_stats.get(qid)
+        if gone is not None:
+            self._merge_stats(self._departed, gone)
+        self._handles.pop(qid, None)
+        self._query_stats.pop(qid, None)
+        self._query_cost.pop(qid, None)
+        self._fresh.pop(qid, None)
+        self._pending.pop(qid, None)
+        for (q, d), rid in list(self._ids.items()):
+            if q == qid:
+                del self._ids[(q, d)]
+                self._requests.pop(rid, None)
+                for tok in self._tok.values():
+                    tok.pop(rid, None)
+
+    def _submit(self, handle: QueryHandle, doc_id: int, text: str,
+                arrival: Optional[float] = None, stage: int = 0,
+                arrival_ts: Optional[float] = None) -> DocFuture:
+        qid = handle.query_id
+        assert self._handles.get(qid) is handle, \
+            "handle is not registered with this server"
+        key = (qid, doc_id)
+        assert key not in self._ids, \
+            f"doc {doc_id} already submitted to query {qid}"
         if arrival_ts is None:
             arrival_ts = time.perf_counter()
         if arrival is None:
             arrival = arrival_ts
-        req = DocRequest(
-            doc_id=doc_id,
-            stage=min(max(int(stage), 0), len(self._stages) - 1),
-            arrival=arrival, seq=self._seq, arrival_ts=arrival_ts)
+        rid = self._seq                   # server-global request id == seq
         self._seq += 1
+        req = DocRequest(
+            doc_id=rid, query_id=qid, ext_id=doc_id,
+            stage=min(max(int(stage), 0), len(handle.stages) - 1),
+            arrival=arrival, seq=rid, arrival_ts=arrival_ts)
         enc: Dict[int, np.ndarray] = {}     # backends often share a tokenizer
         for m, be in self.backends.items():
             ids = enc.get(id(be.tokenizer))
             if ids is None:
                 ids = np.asarray(be.tokenizer.encode(text), np.int32)
                 enc[id(be.tokenizer)] = ids
-            self._tok[m][doc_id] = ids
+            self._tok[m][rid] = ids
             req.tok_len[m] = len(ids)
-        self._reqs[doc_id] = req
+        self._requests[rid] = req
+        self._ids[key] = rid
+        self._pending[qid] += 1
         self._queue.push(req)
-        return req
+        return DocFuture(query_id=qid, doc_id=doc_id, _req=req, _server=self)
 
-    def pending(self) -> int:
-        """Documents admitted but not yet resolved."""
-        return len(self._queue)
+    def pending(self, query_id: Optional[int] = None) -> int:
+        """Documents admitted but not yet resolved (one query, or all)."""
+        if query_id is None:
+            return len(self._queue)
+        return self._pending.get(query_id, 0)
 
     # ------------------------------------------------------------ scheduling
-    def _make_room(self, be, launch: LaunchSpec) -> LaunchSpec:
-        """Enforce the backend's slot budget for one launch.
+    def _stage_of(self, req: DocRequest) -> StageConfig:
+        """Resolve a request's current stage through its owning query."""
+        return self._handles[req.query_id].stage_config(req.stage)
 
-        First preempts the lowest-priority (newest-arrival) live slots
-        outside the launch; if the budget still cannot host every new
+    def _victim_order(self, be, protected: Set[int]) -> List[int]:
+        """Eviction priority, lowest first: fewest-cached-tokens-lost,
+        newest arrival breaking ties (two stable sorts, reversed-arrival
+        first)."""
+        victims = sorted(
+            (d for d in be.live_docs() if d not in protected),
+            key=lambda d: self._requests[d].key(), reverse=True)
+        victims.sort(key=be.true_cached_len)
+        return victims
+
+    def _make_room(self, be, launch: LaunchSpec) -> LaunchSpec:
+        """Enforce the backend's slot/byte budgets for one launch.
+
+        First preempts live slots outside the launch (fewest cached
+        tokens lost first); if the budgets still cannot host every new
         allocation, the newest tail of the launch is deferred back to the
         queue (at least one document always proceeds).
         """
-        if getattr(be, "slot_budget", None) is None:
+        if (getattr(be, "slot_budget", None) is None
+                and getattr(be, "byte_budget", None) is None):
             return launch
         need = sum(1 for d in launch.doc_ids if not be.has_slot(d))
-        if be.live_slots() + need <= be.slot_budget:
+        if not be.over_budget(launch.bucket, need):
             return launch
-        protected = set(launch.doc_ids)
-        victims = sorted(
-            (d for d in be.live_docs() if d not in protected),
-            key=lambda d: self._reqs[d].key(), reverse=True)
-        for d in be.evict_for_room(need, victims):
-            req = self._reqs[d]
+        victims = self._victim_order(be, set(launch.doc_ids))
+        for d in be.evict_for_room(launch.bucket, need, victims):
+            req = self._requests[d]
             req.cached[be.name] = 0
             req.evictions += 1
-            self._stats.evictions += 1
-        room = max(be.slot_budget - be.live_slots(), 0)
+            self._query_stats[req.query_id].evictions += 1
+        retired = getattr(be, "pressure_retired", 0)
+        if retired:
+            be.pressure_retired = 0
+            self._note_retired(retired)
+        room = be.admissible_new(launch.bucket, need)
         if need <= room:
             return launch
         # trim: keep the oldest prefix whose new allocations fit (>= 1 doc)
@@ -525,7 +844,7 @@ class CascadeEngine:
         for d, s in zip(launch.doc_ids, launch.stages):
             cost = 0 if be.has_slot(d) else 1
             if keep_ids and used + cost > room:
-                self._queue.push(self._reqs[d])     # defer to a later launch
+                self._queue.push(self._requests[d])  # defer to a later launch
                 continue
             keep_ids.append(d)
             keep_stages.append(s)
@@ -536,14 +855,22 @@ class CascadeEngine:
             f_len=launch.f_len, doc_ids=tuple(keep_ids),
             stages=tuple(keep_stages))
 
-    def step(self) -> List[int]:
-        """Dispatch one launch from the ready queue.
+    def _note_retired(self, n: int) -> None:
+        # arenas are shared: retirement is a server-wide memory event,
+        # mirrored into every query's stats (aggregate counts it once)
+        self._retired += n
+        for st in self._query_stats.values():
+            st.retired_buckets += n
 
-        Returns the doc ids resolved by this step (may be empty).  No-op
-        when the queue is idle.
+    def step(self) -> List[Tuple[int, int]]:
+        """Dispatch one launch from the shared ready queue.
+
+        The launch may mix documents from several registered queries
+        (same static signature).  Returns the ``(query_id, doc_id)``
+        pairs resolved by this step (may be empty).  No-op when idle.
         """
-        assert self._started, "call start(cascade) before step()"
-        launch = self._queue.next_launch(self._stage_config, self.batch_size)
+        launch = self._queue.next_launch(self._stage_of, self.batch_size,
+                                         policy=self.policy)
         if launch is None:
             return []
         be = self.backends[launch.model]
@@ -554,16 +881,21 @@ class CascadeEngine:
             launch.fraction, launch.cached_len,
             self._op_tokens(be, launch.op_id), self.n_classes)
         now = time.perf_counter()
-        resolved: List[int] = []
-        for i, d in enumerate(ids):
-            req = self._reqs[d]
-            thr = self._stages[req.stage][3]
+        resolved: List[Tuple[int, int]] = []
+        touched: Dict[int, None] = {}           # queries in this launch
+        for i, rid in enumerate(ids):
+            req = self._requests[rid]
+            qid = req.query_id
+            touched[qid] = None
+            stats = self._query_stats[qid]
+            thr = self._handles[qid].stages[req.stage][3]
             cost_d = (new_d[i] * be.rate_per_token
                       + cached_d[i] * be.rate_per_token * be.cached_discount)
-            self._stats.record(req.stage, 1, int(new_d[i]), int(cached_d[i]),
-                               cost_d)
-            self._cost += cost_d
-            req.cached[be.name] = be.cached_len(d)
+            stats.record(req.stage, 1, int(new_d[i]), int(cached_d[i]),
+                         cost_d)
+            self._query_cost[qid] += cost_d
+            req.cost += cost_d
+            req.cached[be.name] = be.cached_len(rid)
             if thr is None or c[i] >= thr[p[i]]:
                 req.done = True
                 req.pred = int(p[i])
@@ -571,43 +903,167 @@ class CascadeEngine:
                 req.exit_stage = req.stage
                 for b in self.backends.values():
                     if hasattr(b, "release"):
-                        b.release(d)
-                self._stats.latencies.append(max(now - req.arrival_ts, 0.0))
-                self._fresh.append(d)
-                resolved.append(d)
+                        b.release(rid)
+                for tok in self._tok.values():
+                    tok.pop(rid, None)
+                stats.latencies.append(max(now - req.arrival_ts, 0.0))
+                self._fresh[qid].append(rid)
+                self._pending[qid] -= 1
+                resolved.append((qid, req.ext_id))
             else:
                 req.stage += 1
                 self._queue.push(req)
-        self._stats.batches += 1
+        self._launches += 1
+        for qid in touched:       # a query's ``batches`` = launches it rode
+            self._query_stats[qid].batches += 1
         # retirement ticks on EVERY backend: one that stops receiving
         # launches must still free arenas its drifted length mix pinned
-        for b in self.backends.values():
-            if hasattr(b, "note_launch"):
-                self._stats.retired_buckets += b.note_launch()
+        retired = sum(b.note_launch() for b in self.backends.values()
+                      if hasattr(b, "note_launch"))
+        if retired:
+            self._note_retired(retired)
         return resolved
+
+    # --------------------------------------------------------------- results
+    def _poll_query(self, query_id: int) -> Dict[int, Tuple[int, float, int]]:
+        out = {}
+        for rid in self._fresh.get(query_id, []):
+            req = self._requests[rid]
+            out[req.ext_id] = (req.pred, req.conf, req.exit_stage)
+        self._fresh[query_id] = []
+        return out
+
+    def poll(self) -> Dict[Tuple[int, int], Tuple[int, float, int]]:
+        """Server-wide results resolved since the last poll:
+        (query_id, doc_id) -> (pred, conf, exit_stage)."""
+        out = {}
+        for qid in list(self._fresh):
+            for d, v in self._poll_query(qid).items():
+                out[(qid, d)] = v
+        return out
+
+    def cost(self, query_id: int) -> float:
+        """Accumulated $ of one query."""
+        return self._query_cost[query_id]
+
+    def stats(self, query_id: Optional[int] = None) -> ServeStats:
+        """Per-query stats, or the server-wide aggregate (query_id=None).
+
+        Aggregation counts each launch ONCE however many queries shared
+        it (``batches`` = server launches), sums stage vectors by index,
+        and concatenates latencies.  A query's own ``batches`` counts the
+        launches that carried at least one of its documents, so per-query
+        batches can sum to more than the aggregate — that overlap is the
+        multi-tenant packing win.
+        """
+        if query_id is not None:
+            return self._query_stats[query_id]
+        agg = ServeStats()
+        for st in [self._departed, *self._query_stats.values()]:
+            self._merge_stats(agg, st)
+        agg.batches = self._launches
+        agg.retired_buckets = self._retired
+        return agg
+
+    @staticmethod
+    def _merge_stats(dst: ServeStats, src: ServeStats) -> None:
+        """Fold one query's stage vectors/evictions/latencies into
+        ``dst`` (launch counters are NOT summed — launches are shared)."""
+        for s in range(len(src.stage_docs)):
+            dst.record(s, src.stage_docs[s], src.stage_new_tokens[s],
+                       src.stage_cached_tokens[s], src.stage_cost[s])
+        dst.evictions += src.evictions
+        dst.latencies.extend(src.latencies)
+
+    def occupancy(self) -> float:
+        """Mean documents per launch across every query the server has
+        served — departed queries included (the packing metric: higher
+        than any single query could reach alone means cross-query
+        launches are being merged)."""
+        docs = sum(sum(st.stage_docs)
+                   for st in [self._departed, *self._query_stats.values()])
+        return docs / self._launches if self._launches else 0.0
+
+    def result(self, query_id: int) -> EngineResult:
+        """One query's resolved documents (keyed by the caller's doc ids),
+        with per-query cost/stats and deterministic per-document $."""
+        done = [r for r in self._requests.values()
+                if r.done and r.query_id == query_id]
+        stats = self._query_stats[query_id]
+        return EngineResult(
+            pred={r.ext_id: r.pred for r in done},
+            conf={r.ext_id: r.conf for r in done},
+            exit_stage={r.ext_id: r.exit_stage for r in done},
+            cost=self._query_cost[query_id], stats=stats,
+            stage_cost=list(stats.stage_cost),
+            doc_cost={r.ext_id: r.cost for r in done})
+
+    def drain(self) -> Dict[int, EngineResult]:
+        """Step until the shared queue is idle; per-query results."""
+        while self.pending():
+            self.step()
+        return {qid: self.result(qid) for qid in self._handles}
+
+
+@dataclass
+class CascadeEngine(CascadeServer):
+    """Single-query compatibility wrapper over ``CascadeServer``.
+
+    ``start(cascade)`` resets the server session and registers exactly one
+    query; ``submit/step/poll/drain/result`` operate on it with the
+    pre-server signatures, and ``run()`` (submit everything + drain) is
+    bit-identical — preds, confs, per-document $ — to the single-tenant
+    engine on static corpora: one registered query produces exactly the
+    same launch sequence through the shared queue.
+    """
+
+    _handle: Optional[QueryHandle] = field(default=None, repr=False)
+
+    # single-query views used by tests/tools (the server partitions these)
+    @property
+    def _reqs(self) -> Dict[int, DocRequest]:
+        qid = self._handle.query_id
+        return {r.ext_id: r for r in self._requests.values()
+                if r.query_id == qid}
+
+    @property
+    def _stats(self) -> ServeStats:
+        return self._query_stats[self._handle.query_id]
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self, cascade: Cascade, oracle_model: str = "oracle") -> None:
+        """Begin a single-query serving session: reset backends, clear the
+        queue, register the cascade."""
+        self.reset()
+        self._handle = self.register(cascade, oracle_model=oracle_model)
+
+    def submit(self, doc_id: int, text: str,
+               arrival: Optional[float] = None, stage: int = 0,
+               arrival_ts: Optional[float] = None) -> DocFuture:
+        """Admit a document into the session (see ``QueryHandle.submit``)."""
+        assert self._handle is not None, "call start(cascade) before submit()"
+        return self._handle.submit(doc_id, text, arrival=arrival,
+                                   stage=stage, arrival_ts=arrival_ts)
+
+    def step(self) -> List[int]:
+        """Dispatch one launch; returns the doc ids resolved by it."""
+        assert self._handle is not None, "call start(cascade) before step()"
+        return [d for _, d in super().step()]
 
     def poll(self) -> Dict[int, Tuple[int, float, int]]:
         """Results resolved since the last poll: doc -> (pred, conf, stage)."""
-        out = {d: (self._reqs[d].pred, self._reqs[d].conf,
-                   self._reqs[d].exit_stage)
-               for d in self._fresh}
-        self._fresh = []
-        return out
+        return self._handle.poll()
+
+    def result(self, query_id: Optional[int] = None) -> EngineResult:
+        if query_id is None:
+            query_id = self._handle.query_id
+        return super().result(query_id)
 
     def drain(self) -> EngineResult:
         """Step until the queue is idle; result covers the whole session."""
-        while len(self._queue):
-            self.step()
+        while self.pending():
+            CascadeServer.step(self)
         return self.result()
-
-    def result(self) -> EngineResult:
-        done = [r for r in self._reqs.values() if r.done]
-        return EngineResult(
-            pred={r.doc_id: r.pred for r in done},
-            conf={r.doc_id: r.conf for r in done},
-            exit_stage={r.doc_id: r.exit_stage for r in done},
-            cost=self._cost, stats=self._stats,
-            stage_cost=list(self._stats.stage_cost))
 
     # -------------------------------------------------------- batch wrapper
     def run(self, cascade: Cascade, docs: Mapping[int, str],

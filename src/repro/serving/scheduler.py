@@ -10,20 +10,29 @@ rebuild.
 Continuous batching rides on two pieces here:
 
 ``DocRequest``
-    per-document lifecycle state — stage cursor, arrival time, per-backend
-    cached/tokenized lengths, resolution status, eviction count.  The
-    engine owns one per submitted document from ``submit()`` to
-    resolution.
+    per-document lifecycle state — owning query, stage cursor, arrival
+    time, per-backend cached/tokenized lengths, resolution status,
+    eviction count, accumulated $ cost.  The server owns one per
+    submitted document from ``submit()`` to resolution.  ``query_id``
+    names the registered query whose stage table the cursor walks;
+    ``ext_id`` is the caller's document id (``doc_id`` is the
+    server-global request id used as the slot/token key, so documents
+    from different queries never collide).
 
 ``RequestQueue``
-    the global ready queue.  ``next_launch`` packs the *entire* ready set
-    — every stage at once — into static-signature launches keyed by
-    ``(backend, bucket, cached_len, op, f_len)`` and pops the group whose
-    head document is oldest (FIFO head-of-line).  A stage-0 prefill for a
-    new arrival and a stage-2 decode for a veteran are just two groups in
-    the same queue: they dispatch back-to-back without either cohort
-    draining first, and both reuse the engine's compiled steps because the
-    static signature carries no stage index.
+    the global ready queue, shared by every registered query.
+    ``next_launch`` packs the *entire* ready set — every stage of every
+    query at once — into static-signature launches keyed by ``(backend,
+    bucket, cached_len, op, f_len)``.  The signature carries neither a
+    stage index nor a query id, so a stage-0 prefill for one query and a
+    stage-2 decode for another merge into ONE launch whenever their
+    static shapes agree (cross-query packing), and mixed-query launches
+    reuse the same compiled steps.  Which ready group dispatches next is
+    a pluggable ``policy``: the default ``oldest_head_first`` pops the
+    group whose head document is oldest (FIFO head-of-line — admission
+    is fair across queries because ``(arrival, seq)`` is server-global),
+    while ``largest_ready_group`` trades per-document latency for batch
+    occupancy under overload.
 
 ``pack_stage_batches`` (the PR-1 stage-synchronous packer) is retained for
 per-stage scoring paths; it emits ``StageBatch`` launches grouped by
@@ -88,13 +97,18 @@ def make_buckets(doc_ids: Iterable[int], lengths: Dict[int, int],
 class DocRequest:
     """Per-document lifecycle state for the continuous-batching loop.
 
-    A request is created by ``CascadeEngine.submit`` and lives until the
-    document resolves (``done``).  ``stage`` is the cursor into the
-    cascade's stage list (len(tasks) == the oracle fall-through);
+    A request is created by a query handle's ``submit`` and lives until
+    the document resolves (``done``).  ``query_id`` names the registered
+    query whose stage table ``stage`` indexes (len(tasks) == the oracle
+    fall-through); ``ext_id`` is the caller's document id while
+    ``doc_id`` is the server-global request id used as the slot/token
+    key — two queries may both submit a document "7" without colliding.
     ``cached`` mirrors each backend's padded cached-prefix length so the
     scheduler can compute launch signatures without touching arenas.
     Eviction resets the victim backend's entry to 0 — the document re-
     enters the queue at its current stage and re-prefills as new tokens.
+    ``cost`` accumulates this document's own $ across its launches
+    (deterministic per-doc accounting regardless of launch composition).
     """
 
     doc_id: int
@@ -104,11 +118,18 @@ class DocRequest:
     arrival_ts: float = 0.0           # perf_counter latency anchor
     tok_len: Dict[str, int] = field(default_factory=dict)   # backend -> len
     cached: Dict[str, int] = field(default_factory=dict)    # backend -> pad len
+    query_id: int = 0                 # owning registered query
+    ext_id: Optional[int] = None      # caller's doc id (defaults to doc_id)
+    cost: float = 0.0                 # accumulated per-document $
     pred: Optional[int] = None
     conf: Optional[float] = None
     exit_stage: Optional[int] = None
     evictions: int = 0
     done: bool = False
+
+    def __post_init__(self) -> None:
+        if self.ext_id is None:
+            self.ext_id = self.doc_id
 
     def key(self) -> Tuple[float, int]:
         return (self.arrival, self.seq)
@@ -131,19 +152,49 @@ class LaunchSpec:
     stages: Tuple[int, ...]
 
 
-# (model, op_id, fraction) of a stage cursor
+# (model, op_id, fraction) of a request's current stage
 StageConfig = Tuple[str, str, float]
+# static launch signature: (model, op_id, fraction, bucket, cached, f_len)
+SignatureKey = Tuple[str, str, float, int, int, int]
+# scheduling policy: pick which ready group dispatches next
+SchedulingPolicy = Callable[
+    [Mapping[SignatureKey, List[DocRequest]],
+     Mapping[SignatureKey, Tuple[float, int]]], SignatureKey]
+
+
+def oldest_head_first(
+    groups: Mapping[SignatureKey, List[DocRequest]],
+    heads: Mapping[SignatureKey, Tuple[float, int]],
+) -> SignatureKey:
+    """Default policy: the group whose head (oldest) request has the
+    smallest ``(arrival, seq)`` — head-of-line FIFO.  Veterans deep in
+    the cascade are never starved by a stream of new arrivals, and
+    because ``(arrival, seq)`` is server-global, admission stays fair
+    across registered queries."""
+    return min(heads, key=heads.get)
+
+
+def largest_ready_group(
+    groups: Mapping[SignatureKey, List[DocRequest]],
+    heads: Mapping[SignatureKey, Tuple[float, int]],
+) -> SignatureKey:
+    """Throughput policy: the group with the most ready documents (oldest
+    head breaks ties).  Under sustained overload this keeps launches full
+    — trading head-of-line latency (p50) for batch occupancy."""
+    return min(groups, key=lambda k: (-len(groups[k]), heads[k]))
 
 
 class RequestQueue:
-    """Global cross-stage ready queue for the continuous-batching loop.
+    """Global cross-stage, cross-query ready queue for the
+    continuous-batching loop.
 
-    Holds every unresolved, not-in-flight ``DocRequest``.  ``next_launch``
-    groups the whole ready set by static signature and pops up to
-    ``batch_size`` documents from the group whose head (oldest) request
-    has the smallest ``(arrival, seq)`` — head-of-line FIFO, so veterans
-    deep in the cascade are never starved by a stream of new arrivals,
-    while arrivals still batch together whenever they share a signature.
+    Holds every unresolved, not-in-flight ``DocRequest`` across ALL
+    registered queries.  ``next_launch`` groups the whole ready set by
+    static signature and pops up to ``batch_size`` documents from the
+    group a ``policy`` selects (default: ``oldest_head_first``).  The
+    signature carries neither stage index nor query id, so requests from
+    different queries (and different stages) merge into one launch
+    whenever their compiled shapes agree.
     """
 
     def __init__(self) -> None:
@@ -164,25 +215,29 @@ class RequestQueue:
 
     def next_launch(
         self,
-        stage_config: Callable[[int], StageConfig],
+        stage_config: Callable[[DocRequest], StageConfig],
         batch_size: int,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
+        policy: Optional[SchedulingPolicy] = None,
     ) -> Optional[LaunchSpec]:
         """Pop the next launch, or None when the queue is empty.
 
-        ``stage_config(stage) -> (model, op_id, fraction)`` maps a stage
-        cursor to its task configuration (the oracle fall-through
-        included).
+        ``stage_config(req) -> (model, op_id, fraction)`` resolves a
+        request's CURRENT stage through its owning query (the oracle
+        fall-through included) — multi-tenant serving passes a resolver
+        that dispatches on ``req.query_id``, so two queries whose stages
+        share a static signature land in the same group.  ``policy``
+        picks which ready group dispatches (None = ``oldest_head_first``;
+        ``largest_ready_group`` favours occupancy under overload).
         """
         if not self._ready:
             return None
         # one O(N) pass: bin by signature, tracking each group's head so
         # only the SELECTED group is sorted (not every group every step)
-        groups: Dict[Tuple, List[DocRequest]] = {}
-        heads: Dict[Tuple, Tuple[float, int]] = {}
-        best_key = None
+        groups: Dict[SignatureKey, List[DocRequest]] = {}
+        heads: Dict[SignatureKey, Tuple[float, int]] = {}
         for req in self._ready.values():
-            model, op_id, fraction = stage_config(req.stage)
+            model, op_id, fraction = stage_config(req)
             blen = bucket_len(req.tok_len[model], buckets)
             f_len = fraction_len(blen, fraction)
             eff_c = min(req.cached.get(model, 0), f_len)
@@ -190,8 +245,7 @@ class RequestQueue:
             groups.setdefault(key, []).append(req)
             if key not in heads or req.key() < heads[key]:
                 heads[key] = req.key()
-                if best_key is None or heads[key] < heads[best_key]:
-                    best_key = key
+        best_key = (policy or oldest_head_first)(groups, heads)
         model, op_id, fraction, blen, eff_c, f_len = best_key
         take = sorted(groups[best_key], key=DocRequest.key)[:batch_size]
         for req in take:

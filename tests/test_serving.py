@@ -1,5 +1,6 @@
-"""Serving engine: request loop, prefix reuse, eviction, cost parity,
-scheduler buckets + ready queue."""
+"""Serving: multi-tenant server (cross-query packing, per-query
+partitioning), request loop, prefix reuse, slot/byte budgets + eviction,
+cost parity, scheduler buckets + ready queue + policies."""
 import math
 
 import jax
@@ -14,10 +15,10 @@ from repro.data.documents import generate_corpus
 from repro.data.tokenizer import HashWordTokenizer
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
-from repro.serving.engine import CascadeEngine, LMBackend
+from repro.serving.engine import CascadeEngine, CascadeServer, LMBackend
 from repro.serving.scheduler import (DocRequest, RequestQueue, ServeStats,
-                                     bucket_len, make_buckets,
-                                     pack_stage_batches)
+                                     bucket_len, largest_ready_group,
+                                     make_buckets, pack_stage_batches)
 
 
 def _mk_backend(name, seed, tokz, **kw):
@@ -309,6 +310,93 @@ def test_eviction_requeues_and_resolves(docs):
     assert res.stats.evictions == eng._reqs[a].evictions >= 1
 
 
+def test_byte_budget_evicts_and_resolves(docs):
+    """A byte-denominated budget preempts slots when the pending launch
+    would GROW an arena past it; the evicted document re-resolves and the
+    arenas never exceed the budget."""
+    ids = _same_bucket_ids(docs, 2)
+    sub = {d: docs[d] for d in ids}
+    thr = {0: 2.0, 1: 2.0}
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+    ref = _mk_engine(batch_size=1).run(ladder, sub)   # unbudgeted baseline
+
+    eng = _mk_engine(batch_size=1, init_slots=1)
+    bucket = bucket_len(
+        len(eng.backends["proxy"].tokenizer.encode(sub[ids[0]])))
+    for be in eng.backends.values():
+        # room for ONE live row + the scratch row, never a second slot
+        be.byte_budget = 2 * be.slot_nbytes(bucket)
+        assert be.slot_budget is None                 # bytes bind, not slots
+    a, b = ids
+    eng.start(ladder)
+    eng.submit(a, sub[a], arrival=0.0)
+    eng.step()                                        # a cached at stage 0
+    assert eng.backends["proxy"].cached_len(a) > 0
+    eng.submit(b, sub[b], arrival=-1.0)               # older -> higher prio
+    eng.step()                                        # b launches, evicts a
+    assert eng._stats.evictions >= 1
+    be = eng.backends["proxy"]
+    assert be.cached_len(a) == 0                      # cache gone
+    # an arena irreducibly over budget must NOT thrash its residents:
+    # with no growth forced, same-bucket eviction frees no bytes
+    live, saved = be.live_docs(), be.byte_budget
+    assert live
+    be.byte_budget = 1                                # below even one row
+    assert be.evict_for_room(bucket, 0, live) == []   # need_new == 0
+    assert be.live_docs() == live
+    be.byte_budget = saved
+    res = eng.drain()
+    assert res.pred == ref.pred
+    np.testing.assert_allclose(
+        [res.conf[d] for d in ids], [ref.conf[d] for d in ids], atol=1e-5)
+    # re-prefill billed as new tokens; arenas stayed within budget
+    assert res.stats.total_new_tokens() > ref.stats.total_new_tokens()
+    for be in eng.backends.values():
+        assert be.arena_nbytes() <= be.byte_budget
+
+
+def test_slot_nbytes_matches_arena_accounting(engine, docs):
+    """The shape-only per-slot projection agrees exactly with the bytes a
+    materialized arena pins."""
+    be = engine.backends["proxy"]
+    be.reset()
+    d0 = sorted(docs)[0]
+    toks = {d0: np.asarray(be.tokenizer.encode(docs[d0]), np.int32)}
+    blen = bucket_len(len(toks[d0]))
+    op = np.asarray(be.tokenizer.encode("op"), np.int32)
+    be.run_stage([d0], toks, blen, 1.0, op, 2)
+    ar = be._arenas[blen]
+    assert be.slot_nbytes(blen) * (ar.capacity + 1) == ar.nbytes()
+    assert be.projected_nbytes(blen, 0) == be.arena_nbytes()
+
+
+def test_victim_order_prefers_fewest_cached_tokens(docs):
+    """Eviction victims are ordered fewest-cached-tokens-lost first, with
+    newest arrival breaking ties (the old policy was newest-only)."""
+    eng = _mk_engine(batch_size=1)
+    be = eng.backends["proxy"]
+    a, b, c = sorted(docs)[:3]
+    toks = {a: np.asarray(be.tokenizer.encode(docs[a]), np.int32),
+            b: np.asarray(be.tokenizer.encode(docs[b]), np.int32)}
+    toks[c] = toks[b]              # equal lengths -> equal cache: tie-break
+    blen = max(bucket_len(len(t)) for t in toks.values())
+    op = np.asarray(be.tokenizer.encode("op"), np.int32)
+    be.run_stage([a], toks, blen, 0.25, op, 2)        # a: small cache, old
+    be.run_stage([b, c], toks, blen, 1.0, op, 2)      # b, c: full caches
+    eng._requests.update({
+        a: DocRequest(a, arrival=0.0, seq=0),
+        b: DocRequest(b, arrival=1.0, seq=1),
+        c: DocRequest(c, arrival=2.0, seq=2),
+    })
+    # fewest cached tokens first (a, despite being OLDEST); among the
+    # equal-cache pair, the newer arrival (c) goes first
+    assert eng._victim_order(be, protected=set()) == [a, c, b]
+    assert eng._victim_order(be, protected={a}) == [c, b]
+
+
 def test_bucket_retirement_frees_arena():
     """A bucket idle for ``retire_after`` launches releases its arena."""
     eng = _mk_engine(batch_size=4, retire_after=1)
@@ -327,6 +415,139 @@ def test_bucket_retirement_frees_arena():
     assert small not in oracle._arenas                # device arena freed
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant server
+# ---------------------------------------------------------------------------
+
+def _same_bucket_ids(docs, n=2):
+    """First ``n`` doc ids sharing one length bucket (largest such group)."""
+    tokz = HashWordTokenizer(vocab_size=512)
+    by_bucket = {}
+    for d in sorted(docs):
+        by_bucket.setdefault(
+            bucket_len(len(tokz.encode(docs[d]))), []).append(d)
+    ids = max(by_bucket.values(), key=len)
+    assert len(ids) >= n, "corpus fixture lost its bucket overlap"
+    return ids[:n]
+
+
+QUERY_A = Cascade([
+    Task(TaskConfig("proxy", "sur_1", 0.25), {0: 0.7, 1: 0.7}),
+    Task(TaskConfig("proxy", "o_orig", 1.0), {0: 0.75, 1: 0.75}),
+])
+QUERY_B = Cascade([                        # same stage-0 signature as A,
+    Task(TaskConfig("proxy", "sur_1", 0.25), {0: 0.9, 1: 0.9}),
+    Task(TaskConfig("proxy", "sur_1", 1.0), {0: 0.8, 1: 0.8}),
+])                                         # different thresholds + stage 1
+
+
+def test_cross_query_packing_merges_launches(engine, docs):
+    """Two registered queries whose stages share a (backend, bucket,
+    cached_len, op, f_len) signature merge into ONE launch, with
+    per-query preds/confs/$ identical to isolated engines."""
+    ids = _same_bucket_ids(docs, 2)
+    sub = {d: docs[d] for d in ids}
+    ref_a = engine.run(QUERY_A, sub)                  # isolated baselines
+    ref_b = engine.run(QUERY_B, sub)
+
+    server = CascadeServer(engine.backends, OPS, n_classes=2, batch_size=8)
+    server.reset()
+    ha, hb = server.register(QUERY_A), server.register(QUERY_B)
+    for j, d in enumerate(ids):
+        ha.submit(d, sub[d], arrival=float(j))
+        hb.submit(d, sub[d], arrival=float(j))
+    server.step()
+    # ONE launch carried stage-0 documents of BOTH queries
+    assert server.stats().batches == 1
+    assert server.stats(ha.query_id).batches == 1
+    assert server.stats(hb.query_id).batches == 1
+    assert server.stats(ha.query_id).stage_docs[0] == len(ids)
+    assert server.stats(hb.query_id).stage_docs[0] == len(ids)
+
+    while server.pending():
+        server.step()
+    res_a, res_b = ha.result(), hb.result()
+    for res, ref in ((res_a, ref_a), (res_b, ref_b)):
+        assert res.pred == ref.pred
+        assert res.exit_stage == ref.exit_stage
+        assert res.doc_cost == ref.doc_cost           # exact $ per document
+        np.testing.assert_allclose(
+            [res.conf[d] for d in ids], [ref.conf[d] for d in ids],
+            atol=1e-6)
+    # fewer launches than the two isolated sessions needed
+    assert server.stats().batches \
+        < ref_a.stats.batches + ref_b.stats.batches
+
+
+def test_server_partitions_results_and_stats(engine, docs):
+    """Doc ids are scoped per query; results, stats, and $ stay
+    partitioned while the aggregate view counts each launch once."""
+    ids = sorted(docs)[:4]
+    sub = {d: docs[d] for d in ids}
+    server = CascadeServer(engine.backends, OPS, n_classes=2, batch_size=4)
+    server.reset()
+    ha, hb = server.register(QUERY_A), server.register(QUERY_B)
+    futs = [ha.submit(d, sub[d], arrival=float(j))
+            for j, d in enumerate(ids)]
+    for j, d in enumerate(ids):                       # same ids, no clash
+        hb.submit(d, sub[d], arrival=float(j))
+    polled_a = {}
+    while server.pending():
+        server.step()
+        polled_a.update(ha.poll())
+    res_a, res_b = ha.result(), hb.result()
+    assert set(res_a.pred) == set(ids) == set(res_b.pred)
+    assert polled_a == {d: (res_a.pred[d], res_a.conf[d],
+                            res_a.exit_stage[d]) for d in ids}
+    assert all(f.done and f.pred == res_a.pred[f.doc_id] for f in futs)
+    assert res_a.cost == pytest.approx(sum(res_a.doc_cost.values()))
+    # aggregate = per-query sums, but launches counted once
+    agg = server.stats()
+    assert sum(agg.stage_docs) == (sum(res_a.stats.stage_docs)
+                                   + sum(res_b.stats.stage_docs))
+    assert agg.batches < res_a.stats.batches + res_b.stats.batches
+    assert server.occupancy() == pytest.approx(
+        sum(agg.stage_docs) / agg.batches)
+    assert agg.total_cost() == pytest.approx(res_a.cost + res_b.cost)
+    # unregister frees one query's bookkeeping, the other survives, and
+    # the server-wide launch history / packing metric do not shrink
+    server.unregister(ha)
+    assert ha.query_id not in server._handles
+    assert hb.query_id in server._handles
+    assert set(server.result(hb.query_id).pred) == set(ids)
+    after = server.stats()
+    assert after.batches == agg.batches
+    assert sum(after.stage_docs) == sum(agg.stage_docs)
+    assert server.occupancy() == pytest.approx(
+        sum(agg.stage_docs) / agg.batches)
+
+
+def test_doc_future_resolves(engine, docs):
+    """handle.submit returns a DocFuture whose result() steps the server
+    until that document resolves."""
+    d0 = sorted(docs)[0]
+    server = CascadeServer(engine.backends, OPS, n_classes=2, batch_size=4)
+    server.reset()
+    h = server.register(QUERY_A)
+    fut = h.submit(d0, docs[d0])
+    assert not fut.done
+    pred, conf, stage = fut.result()
+    assert fut.done and fut.pred == pred and fut.conf == conf
+    assert fut.cost > 0
+    assert h.result().pred == {d0: pred}
+
+
+def test_engine_is_single_query_server(engine, docs):
+    """The compatibility wrapper serves exactly one registered query and
+    its results equal the server-API view of that query."""
+    sub = {d: docs[d] for d in sorted(docs)[:3]}
+    res = engine.run(LADDER, sub)
+    assert set(res.doc_cost) == set(sub)
+    assert res.cost == pytest.approx(sum(res.doc_cost.values()))
+    assert engine.occupancy() == pytest.approx(
+        sum(res.stats.stage_docs) / res.stats.batches)
+
+
 def test_request_queue_head_of_line():
     """next_launch groups by static signature across stages and pops the
     group whose head request is oldest."""
@@ -339,13 +560,13 @@ def test_request_queue_head_of_line():
                       tok_len={"proxy": 30}))
     q.push(DocRequest(3, stage=0, arrival=2.0, seq=2,
                       tok_len={"proxy": 30}))
-    first = q.next_launch(lambda s: cfg[s], batch_size=8)
+    first = q.next_launch(lambda r: cfg[r.stage], batch_size=8)
     assert first.doc_ids == (1,)                      # veteran first
     assert (first.op_id, first.cached_len, first.f_len) == ("op_b", 8, 32)
-    second = q.next_launch(lambda s: cfg[s], batch_size=8)
+    second = q.next_launch(lambda r: cfg[r.stage], batch_size=8)
     assert second.doc_ids == (2, 3)                   # arrivals batched
     assert (second.op_id, second.cached_len) == ("op_a", 0)
-    assert q.next_launch(lambda s: cfg[s], batch_size=8) is None
+    assert q.next_launch(lambda r: cfg[r.stage], batch_size=8) is None
 
 
 def test_request_queue_merges_same_signature_across_stages():
@@ -355,6 +576,46 @@ def test_request_queue_merges_same_signature_across_stages():
     q = RequestQueue()
     q.push(DocRequest(1, stage=1, arrival=0.0, seq=0, tok_len={"proxy": 20}))
     q.push(DocRequest(2, stage=0, arrival=1.0, seq=1, tok_len={"proxy": 20}))
-    launch = q.next_launch(lambda s: cfg[s], batch_size=8)
+    launch = q.next_launch(lambda r: cfg[r.stage], batch_size=8)
     assert launch.doc_ids == (1, 2)
     assert launch.stages == (1, 0)
+
+
+def test_request_queue_merges_across_queries():
+    """Requests from DIFFERENT queries (and different stages) share one
+    launch when the per-query stage resolver lands them on the same static
+    signature — the query id is bookkeeping, not a compiled shape."""
+    cfgs = {0: {0: ("proxy", "op_a", 0.25)},
+            1: {0: ("proxy", "op_x", 1.0), 1: ("proxy", "op_a", 0.25)}}
+    q = RequestQueue()
+    q.push(DocRequest(1, stage=0, arrival=0.0, seq=0, query_id=0,
+                      tok_len={"proxy": 20}))
+    q.push(DocRequest(2, stage=1, arrival=1.0, seq=1, query_id=1,
+                      tok_len={"proxy": 20}))
+    launch = q.next_launch(lambda r: cfgs[r.query_id][r.stage], batch_size=8)
+    assert launch.doc_ids == (1, 2)                   # one mixed launch
+    assert launch.op_id == "op_a"
+
+
+def test_request_queue_largest_ready_group_policy():
+    """policy=largest_ready_group picks the fullest group even when a
+    smaller group holds the oldest head."""
+    cfg = {0: ("proxy", "op_a", 1.0)}
+    lone, pair = DocRequest(1, arrival=0.0, seq=0, tok_len={"proxy": 20}), [
+        DocRequest(2, arrival=1.0, seq=1, tok_len={"proxy": 100}),
+        DocRequest(3, arrival=2.0, seq=2, tok_len={"proxy": 100})]
+    q = RequestQueue()
+    for r in [lone] + pair:
+        q.push(r)
+    first = q.next_launch(lambda r: cfg[r.stage], batch_size=8,
+                          policy=largest_ready_group)
+    assert first.doc_ids == (2, 3)                    # fullest group wins
+    second = q.next_launch(lambda r: cfg[r.stage], batch_size=8,
+                           policy=largest_ready_group)
+    assert second.doc_ids == (1,)
+    # the default policy would have served the oldest head first
+    for r in [lone] + pair:
+        q.push(DocRequest(r.doc_id, arrival=r.arrival, seq=r.seq,
+                          tok_len=dict(r.tok_len)))
+    assert q.next_launch(lambda r: cfg[r.stage], batch_size=8).doc_ids \
+        == (1,)
