@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate for CI.
+
+Diffs a fresh ``benchmarks/serve_engine.py --smoke`` summary against the
+``"smoke"`` section committed in ``BENCH_serve_engine.json``, with an
+EXPLICIT per-metric tolerance table.  Every gated metric is deterministic
+for a given source tree (seeded corpora/params, blake2 word hashing,
+forced-impossible thresholds, tick-based interactive replay), so the
+tolerances are tight: structural counts (tokens, launches, copy bytes)
+must match exactly, float aggregates ($, occupancy) within 1e-6
+relative.  Timing metrics (docs/s, latency) are intentionally NOT gated.
+
+    python benchmarks/serve_engine.py --smoke          # writes BENCH_smoke.json
+    python benchmarks/check_regression.py BENCH_smoke.json \
+        --baseline BENCH_serve_engine.json
+
+Exit status 0 = within tolerance; 1 = drift (every violation listed).
+An intentional change to the serving economics (token accounting, packing
+policy, copy-traffic model) regenerates the baseline by re-running the
+full benchmark: ``python benchmarks/serve_engine.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric path inside the "smoke" section -> (kind, tolerance)
+#   exact  values must be equal (ints, bools, structural byte counts)
+#   rel    |fresh - base| <= tol * max(|base|, 1e-12)   (floats, lists of
+#          floats elementwise; length mismatch is a violation)
+TOLERANCES = {
+    # static arena engine: token/$ accounting and launch schedule
+    "static.new_tokens":                      ("exact", 0),
+    "static.cached_tokens":                   ("exact", 0),
+    "static.launches":                        ("exact", 0),
+    "static.cost":                            ("rel", 1e-6),
+    "static.cache_hit_rate":                  ("rel", 1e-6),
+    # multi-tenant interactive replay: cross-query packing
+    "multi_tenant.shared_launches":           ("exact", 0),
+    "multi_tenant.isolated_launches":         ("exact", 0),
+    "multi_tenant.occupancy":                 ("rel", 1e-6),
+    "multi_tenant.isolated_occupancy":        ("rel", 1e-6),
+    "multi_tenant.per_query_cost":            ("rel", 1e-6),
+    # paged data plane: structural copy traffic
+    "paged.gather_copy_bytes_per_launch":     ("exact", 0),
+    "paged.paged_arena_copy_bytes_per_launch": ("exact", 0),
+    "paged.paged_undo_log_bytes_per_launch":  ("exact", 0),
+}
+
+# invariants the FRESH summary must satisfy regardless of the baseline
+REQUIRED_TRUE = (
+    "multi_tenant.pred_match",
+    "multi_tenant.doc_cost_parity_exact",
+    "paged.parity.pred_match",
+    "paged.parity.conf_bitwise",
+    "paged.parity.doc_cost_parity_exact",
+)
+
+
+def _get(tree, path: str):
+    for part in path.split("."):
+        tree = tree[part]
+    return tree
+
+
+def _rel_ok(fresh: float, base: float, tol: float) -> bool:
+    return abs(float(fresh) - float(base)) <= tol * max(abs(float(base)),
+                                                        1e-12)
+
+
+def compare(fresh: dict, base: dict) -> list:
+    """Return the list of violations (empty = gate passes)."""
+    violations = []
+    for path, (kind, tol) in TOLERANCES.items():
+        try:
+            f = _get(fresh, path)
+        except (KeyError, TypeError):
+            violations.append(f"{path}: missing from fresh summary")
+            continue
+        try:
+            b = _get(base, path)
+        except (KeyError, TypeError):
+            violations.append(f"{path}: missing from baseline "
+                              f"(regenerate BENCH_serve_engine.json)")
+            continue
+        if isinstance(b, list) or isinstance(f, list):
+            if not isinstance(f, list) or not isinstance(b, list) \
+                    or len(f) != len(b):
+                violations.append(f"{path}: shape mismatch {f!r} vs {b!r}")
+                continue
+            pairs = list(zip(f, b))
+        else:
+            pairs = [(f, b)]
+        for i, (fv, bv) in enumerate(pairs):
+            tag = f"{path}[{i}]" if len(pairs) > 1 else path
+            if kind == "exact":
+                if fv != bv:
+                    violations.append(
+                        f"{tag}: {fv!r} != baseline {bv!r} (exact)")
+            else:
+                if not _rel_ok(fv, bv, tol):
+                    violations.append(
+                        f"{tag}: {fv!r} vs baseline {bv!r} "
+                        f"(rel tol {tol:g})")
+    for path in REQUIRED_TRUE:
+        try:
+            if _get(fresh, path) is not True:
+                violations.append(f"{path}: must be true, got "
+                                  f"{_get(fresh, path)!r}")
+        except (KeyError, TypeError):
+            violations.append(f"{path}: missing from fresh summary")
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("summary", help="fresh --smoke summary JSON")
+    ap.add_argument("--baseline", default="BENCH_serve_engine.json",
+                    help="committed benchmark JSON holding the baseline "
+                         "'smoke' section")
+    args = ap.parse_args()
+    with open(args.summary) as f:
+        fresh = json.load(f)["smoke"]
+    with open(args.baseline) as f:
+        base = json.load(f)["smoke"]
+    violations = compare(fresh, base)
+    if violations:
+        print(f"REGRESSION GATE FAILED ({len(violations)} violation(s) "
+              f"vs {args.baseline}):")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    n = len(TOLERANCES) + len(REQUIRED_TRUE)
+    print(f"regression gate OK: {n} gated metrics within tolerance "
+          f"of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,13 @@ Pipeline (mirrors Figure 2 of the paper, end to end on CPU):
      latency (p50/p99), cost vs oracle-only, and cache hit rate come out
      of each handle's own stats.
 
+The data plane underneath is PAGED on Pallas runtimes: each document owns
+one slot row of a persistent per-bucket KV arena, the per-launch slot ids
+ride into the kernels through scalar-prefetch SMEM, and decode/extend read
+``k_arena[slot]`` blocks in place — no [B, S] gather copy per launch (the
+demo's CPU runtime uses the bitwise-identical gather reference plane; see
+``serving/engine.py``).
+
 Models are tiny untrained LMs (this is a mechanics/integration demo —
 "accuracy" is agreement with the oracle MODEL, exactly the paper's alpha
 definition).
@@ -127,6 +134,12 @@ def main():
           f"{[t.config.key() for t in cascade.tasks]}")
 
     print("5. multi-tenant serving: two queries, one CascadeServer")
+    # Data plane: every document holds one slot row of a persistent
+    # per-bucket KV arena; launches address rows by slot id.  On Pallas
+    # runtimes the ids ride in scalar-prefetch SMEM and the kernels DMA
+    # arena blocks in place (paged attention — zero row-copy bytes per
+    # decode launch); this CPU demo uses the gather reference plane,
+    # which is bitwise-identical by construction.
     test_docs = {i: reordered[i] for i in test_ids}
     # a second tenant: the same task configs under stricter thresholds —
     # distinct query, yet every launch signature (and compiled step, and

@@ -1,6 +1,23 @@
-"""Flash-decoding Pallas TPU kernel: one new query token over a KV cache.
+"""Flash-decoding Pallas TPU kernels: one new query token over a KV cache.
 
-Layout: q [B, Hq, Dh] (a single token per sequence); k/v [B, Hkv, S, Dh].
+Two entry points share one online-softmax body:
+
+``decode_attention_pallas``
+    dense layout — q [B, Hq, Dh] (a single token per sequence) over
+    k/v [B, Hkv, S, Dh]: row b of the cache belongs to sequence b.
+
+``paged_decode_attention_pallas``
+    paged layout — the cache is a persistent slot ARENA
+    k/v [N_rows, S, Hkv, Dh] (the serving engine's model-layout state
+    pytree, untransposed) and each sequence addresses its row through
+    ``slots`` [B].  ``slots`` rides in scalar-prefetch SMEM beside
+    ``kv_len`` and the k/v BlockSpec index maps resolve
+    ``k_arena[slots[b]]`` *inside* the kernel's DMA schedule, so no
+    [B, S] gather copy is ever materialized (vLLM-style paged
+    attention).  Any row index in [0, N_rows) is legal — the serving
+    arena's scratch row (index ``n_slots`` == N_rows - 1) is an
+    explicit sentinel for batch padding and may appear many times.
+
 For GQA we process one kv head per grid step and compute all ``g = Hq/Hkv``
 grouped query heads together, so the query tile is [g, Dh] (padded to the
 8-sublane minimum by Mosaic automatically).
@@ -10,6 +27,9 @@ allocation); ``kv_len`` [B] masks out unwritten slots.  ``kv_len`` rides in
 scalar-prefetch SMEM so the mask costs no extra HBM traffic.
 
 Grid = (B, Hkv, nkv) with kv innermost; f32 accumulator in VMEM scratch.
+Both variants execute the identical per-block math over identical block
+contents, so paged and dense outputs agree BITWISE — the serving engine
+relies on this to keep paged results exactly equal to the gather path.
 """
 from __future__ import annotations
 
@@ -33,6 +53,7 @@ def _decode_kernel(
     sm_scale: float,
     block_kv: int,
     num_kv_blocks: int,
+    paged: bool = False,
 ):
     b = pl.program_id(0)
     jk = pl.program_id(2)
@@ -49,8 +70,14 @@ def _decode_kernel(
     @pl.when(k0 < kv_len)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [g, dh]
-        k = k_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
-        v = v_ref[0, 0].astype(jnp.float32)
+        if paged:
+            # arena block [1, bkv, 1, dh] (model layout, slot-addressed
+            # by the BlockSpec index map) -> [bkv, dh]
+            k = k_ref[0, :, 0, :].astype(jnp.float32)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        else:
+            k = k_ref[0, 0].astype(jnp.float32)             # [bkv, dh]
+            v = v_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -128,4 +155,85 @@ def decode_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dh), q.dtype),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, Dh)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,               # [B, Hq, Dh]
+    k_arena: jnp.ndarray,         # [N_rows, S, Hkv, Dh] persistent arena
+    v_arena: jnp.ndarray,
+    slots: jnp.ndarray,           # [B] int32 arena row per sequence
+    kv_len: jnp.ndarray,          # [B] int32 valid cache entries
+    *,
+    sm_scale: Optional[float] = None,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """True paged decode: KV blocks are DMA'd straight from the arena.
+
+    ``slots`` and ``kv_len`` both ride in scalar-prefetch SMEM; the k/v
+    index maps address block ``(slots[b], j, h)`` of the UNGATHERED arena,
+    so per-launch HBM traffic is the addressed blocks only — the dense
+    path's [B, S] gather copy (``jnp.take``) is eliminated.  The arena
+    keeps the model-side [rows, S, Hkv, Dh] layout; only the tiny query
+    is reshaped.  ``S`` must be a multiple of the effective kv block (the
+    serving arena rounds its per-slot allocation up on Pallas runtimes);
+    callers with ragged arenas use the gather fallback in ``ops``.
+
+    Slot contract: every value must lie in [0, N_rows); the last arena
+    row (``n_slots`` == N_rows - 1) is the serving scratch row and is a
+    LEGAL sentinel that may appear repeatedly (batch padding).  Bounds
+    are validated host-side in ``ops.arena_decode_attention`` when the
+    slot values are concrete.
+    """
+    B, Hq, Dh = q.shape
+    _, S, Hkv, _ = k_arena.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0, (S, block_kv)
+    nkv = S // block_kv
+
+    qg = q.reshape(B, Hkv, g, Dh)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        sm_scale=scale,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+        paged=True,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # (slots, kv_len) — kv_len first in
+        grid=(B, Hkv, nkv),           # kernel args is the dense kernel's
+        in_specs=[                    # order; see call below
+            pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh),
+                         lambda b, h, j, slots_ref, kv_len_ref:
+                         (slots_ref[b], j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh),
+                         lambda b, h, j, slots_ref, kv_len_ref:
+                         (slots_ref[b], j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dh), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+
+    def paged_kernel(slots_ref, kv_len_ref, *rest):
+        # slots are consumed by the index maps only; the body masks by
+        # kv_len exactly like the dense kernel (bitwise-equal math)
+        return kernel(kv_len_ref, *rest)
+
+    out = pl.pallas_call(
+        paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dh), q.dtype),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k_arena, v_arena)
     return out.reshape(B, Hq, Dh)

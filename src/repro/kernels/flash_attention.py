@@ -18,6 +18,15 @@ the output block index is constant over the kv dimension, so the f32
 accumulator / running max / running denominator live in VMEM scratch across
 kv iterations (the canonical TPU "revisiting" pattern).
 
+``paged_flash_attention_pallas`` is the slot-addressed twin for the
+serving engine's extend path: k/v come from a persistent arena
+[N_rows, S_alloc, Hkv, Dh] (model layout, untransposed) and each batch row
+resolves its arena row through ``slots`` [B] riding in scalar-prefetch
+SMEM beside ``kv_len`` — the k/v index maps DMA ``k_arena[slots[b]]``
+blocks directly, so a mid-cascade re-entry prefill appends into the arena
+without first gathering a [B, S] copy.  Per-block math is identical to the
+dense kernel, so paged and gather outputs agree bitwise.
+
 Block shapes must tile the sequence lengths; ``ops.attention`` picks
 hardware-aligned blocks (multiples of 8 sublanes x 128 lanes; MXU-friendly
 head_dim 128/256) and asserts divisibility.
@@ -48,6 +57,7 @@ def _flash_kernel(
     block_q: int,
     block_kv: int,
     num_kv_blocks: int,
+    paged: bool = False,
 ):
     b = pl.program_id(0)
     iq = pl.program_id(2)
@@ -74,8 +84,14 @@ def _flash_kernel(
     @pl.when(run)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [bq, dh]
-        k = k_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
-        v = v_ref[0, 0].astype(jnp.float32)                 # [bkv, dh]
+        if paged:
+            # arena block [1, bkv, 1, dh] (model layout, slot-addressed
+            # by the BlockSpec index map) -> [bkv, dh]
+            k = k_ref[0, :, 0, :].astype(jnp.float32)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        else:
+            k = k_ref[0, 0].astype(jnp.float32)             # [bkv, dh]
+            v = v_ref[0, 0].astype(jnp.float32)             # [bkv, dh]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -177,3 +193,94 @@ def flash_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), q, k, v)
+
+
+def paged_flash_attention_pallas(
+    q: jnp.ndarray,               # [B, Hq, Sq, Dh]
+    k_arena: jnp.ndarray,         # [N_rows, S_alloc, Hkv, Dh] arena
+    v_arena: jnp.ndarray,
+    slots: jnp.ndarray,           # [B] int32 arena row per sequence
+    *,
+    kv_valid: int,                # static: attend keys [0, kv_valid)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,   # [B] valid kv length (pad mask)
+    sm_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Prefix-extend attention reading K/V straight from a slot arena.
+
+    The queries are the suffix [q_offset, q_offset + Sq) of each
+    sequence; cached keys live in ``k_arena[slots[b], :kv_valid]``
+    (chunk included — the caller scatters the new chunk's KV into the
+    arena BEFORE attending, mirroring the dense extend path).  Only the
+    kv blocks covering ``kv_valid`` are visited, so the arena's op-suffix
+    reserve past the bucket costs nothing.  Slot contract as in
+    ``paged_decode_attention_pallas``: any row in [0, N_rows) is legal,
+    the scratch row (N_rows - 1) explicitly so, duplicates allowed.
+    """
+    B, Hq, Sq, Dh = q.shape
+    _, S_alloc, Hkv, _ = k_arena.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    assert 0 < kv_valid <= S_alloc, (kv_valid, S_alloc)
+    scale = sm_scale if sm_scale is not None else 1.0 / (Dh ** 0.5)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, kv_valid)
+    assert Sq % block_q == 0, (Sq, block_q)
+    assert kv_valid % block_kv == 0, (kv_valid, block_kv)
+    nq = Sq // block_q
+    nkv = kv_valid // block_kv
+
+    if kv_len is None:
+        kv_len = jnp.full((B,), kv_valid, jnp.int32)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+        paged=True,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # (slots, kv_len)
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, i, j, *_: (b, h, i, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh),
+                         lambda b, h, i, j, slots_ref, kv_len_ref:
+                         (slots_ref[b], j, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh),
+                         lambda b, h, i, j, slots_ref, kv_len_ref:
+                         (slots_ref[b], j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, i, j, *_: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+    )
+
+    def paged_kernel(slots_ref, kv_len_ref, *rest):
+        # slots feed the index maps only; masking is by kv_len, exactly
+        # as in the dense kernel (bitwise-equal math per block)
+        return kernel(kv_len_ref, *rest)
+
+    return pl.pallas_call(
+        paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), kv_len.astype(jnp.int32), q, k_arena, v_arena)

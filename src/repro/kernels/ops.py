@@ -22,13 +22,39 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
-from .flash_attention import flash_attention_pallas
-from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas, paged_flash_attention_pallas
+from .decode_attention import decode_attention_pallas, paged_decode_attention_pallas
 from .relevance_score import relevance_score_pallas
 
 DEFAULT_IMPL = "xla"
+
+
+def _check_slots(slots, n_rows: int, where: str) -> None:
+    """Validate the arena-slot contract when slot values are host-visible.
+
+    Contract: every slot must lie in ``[0, n_rows)`` where ``n_rows`` is
+    the arena's row count; the LAST row (index ``n_slots == n_rows - 1``)
+    is the serving engine's scratch row and is an explicitly legal
+    sentinel that may appear any number of times (batch padding).
+    Anything outside that range is a caller bug: the gather fallback's
+    ``jnp.take`` would silently CLIP it to the nearest edge row and the
+    paged kernels would DMA an unrelated row — both produce plausible
+    garbage rather than an error.  Under ``jit`` the values are traced
+    and this check is a no-op (the contract still holds; debug with
+    un-jitted calls or ``jax.disable_jit``), so eager callers — tests,
+    the un-jitted reference path — fail loudly here instead.
+    """
+    if isinstance(slots, jax.core.Tracer):
+        return
+    s = np.asarray(slots)
+    if s.size and (int(s.min()) < 0 or int(s.max()) >= n_rows):
+        raise ValueError(
+            f"{where}: slot ids must be in [0, {n_rows}) — the scratch "
+            f"row {n_rows - 1} is the only padding sentinel — got "
+            f"min={int(s.min())} max={int(s.max())}")
 
 
 # ---------------------------------------------------------------------------
@@ -238,28 +264,94 @@ def decode_attention(
 
 def arena_decode_attention(
     q: jnp.ndarray,               # [B, Hq, Dh]
-    k_arena: jnp.ndarray,         # [N_slots, S, Hkv, Dh] persistent arena
+    k_arena: jnp.ndarray,         # [N_rows, S, Hkv, Dh] persistent arena
     v_arena: jnp.ndarray,
-    slots: jnp.ndarray,           # [B] int32 arena slot per sequence
+    slots: jnp.ndarray,           # [B] int32 arena row per sequence
     kv_len: jnp.ndarray,          # [B] valid cache entries per sequence
     *,
     sm_scale: Optional[float] = None,
     impl: str = DEFAULT_IMPL,
     block_kv: int = 512,
 ) -> jnp.ndarray:
-    """Decode attention reading straight from a slot arena.
+    """Decode attention reading straight from a slot arena — the real
+    paged entry point.
 
     The serving engine keeps one preallocated KV arena per length bucket
-    and addresses sequences by slot id; this wrapper is the kernel-side
-    contract for that layout — today it gathers the addressed rows and
-    dispatches to ``decode_attention``, so a future in-kernel paged lookup
-    (slot indices in scalar-prefetch SMEM) can slot in without touching
-    callers.
+    and addresses sequences by slot id.  On Pallas runtimes the slot
+    indices ride in scalar-prefetch SMEM and the kernel's k/v index maps
+    DMA ``k_arena[slots[b]]`` blocks in place — no [B, S] gather copy is
+    materialized, so per-launch HBM traffic no longer scales with the
+    gathered batch.  ``xla``/``naive`` keep the gather-then-reference
+    path as the correctness oracle and CPU fallback (also used when the
+    arena's cache axis is not a kv-block multiple — only possible for
+    arenas built on non-Pallas runtimes).
+
+    Slot contract: values must be in ``[0, N_rows)``; the last row
+    (``n_slots`` == N_rows - 1) is the scratch row, an explicitly legal
+    padding sentinel that may repeat.  Out-of-range ids raise when the
+    values are concrete (see ``_check_slots``); under ``jit`` the gather
+    fallback inherits ``jnp.take`` clip semantics and the paged kernel's
+    behaviour is undefined — callers own the bound.
     """
+    _check_slots(slots, k_arena.shape[0], "arena_decode_attention")
+    if impl in ("pallas", "pallas_interpret"):
+        S = k_arena.shape[1]
+        if S % min(block_kv, S) == 0:
+            return paged_decode_attention_pallas(
+                q, k_arena, v_arena, slots, kv_len, sm_scale=sm_scale,
+                block_kv=block_kv, interpret=(impl == "pallas_interpret"))
     k = jnp.take(k_arena, slots, axis=0)
     v = jnp.take(v_arena, slots, axis=0)
     return decode_attention(q, k, v, kv_len, sm_scale=sm_scale, impl=impl,
                             block_kv=block_kv)
+
+
+def attention_paged(
+    q: jnp.ndarray,               # [B, Sq, Hq, Dh]
+    k_arena: jnp.ndarray,         # [N_rows, S_alloc, Hkv, Dh] arena
+    v_arena: jnp.ndarray,
+    slots: jnp.ndarray,           # [B] int32 arena row per sequence
+    *,
+    kv_valid: int,                # static: attend keys [0, kv_valid)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,
+    sm_scale: Optional[float] = None,
+    impl: str = DEFAULT_IMPL,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Prefix-extend attention over a slot arena (paged extend path).
+
+    The paged twin of ``attention`` for the serving engine's extend step:
+    queries are the suffix at ``q_offset`` and cached keys live in
+    ``k_arena[slots[b], :kv_valid]`` (the caller scatters the new chunk's
+    KV into the arena first).  Pallas runtimes resolve slots inside the
+    kernel when the block constraints hold (``Sq``/``kv_valid`` tile by
+    the effective blocks — serving launches do, since buckets and
+    fraction slices are block-aligned); ragged shapes and
+    ``xla``/``naive`` gather the addressed rows and defer to the dense
+    path, mirroring ``arena_decode_attention``'s fallback.  Slot contract
+    as in ``arena_decode_attention``.
+    """
+    _check_slots(slots, k_arena.shape[0], "attention_paged")
+    if impl in ("pallas", "pallas_interpret"):
+        Sq = q.shape[1]
+        if (Sq % min(block_q, Sq) == 0
+                and kv_valid % min(block_kv, kv_valid) == 0):
+            qt = jnp.swapaxes(q, 1, 2)
+            out = paged_flash_attention_pallas(
+                qt, k_arena, v_arena, slots, kv_valid=kv_valid,
+                causal=causal, window=window, q_offset=q_offset,
+                kv_len=kv_len, sm_scale=sm_scale, block_q=block_q,
+                block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+            return jnp.swapaxes(out, 1, 2)
+    k = jnp.take(k_arena, slots, axis=0)[:, :kv_valid]
+    v = jnp.take(v_arena, slots, axis=0)[:, :kv_valid]
+    return attention(q, k, v, causal=causal, window=window,
+                     q_offset=q_offset, kv_len=kv_len, sm_scale=sm_scale,
+                     impl=impl, block_q=block_q, block_kv=block_kv)
 
 
 def relevance_score(

@@ -14,6 +14,16 @@ Caches are dicts ``{"k": [B, S_alloc, KV, Dh], "v": ...}``; keys are stored
 ring caches (``S_alloc = window``, slot = pos % window) — valid because
 softmax attention is permutation-invariant over the key set once positions
 are baked into the keys.
+
+Paged serving: ``extend``/``decode`` also accept ``slots`` [B], in which
+case ``cache`` is a persistent slot ARENA ``{"k": [N_rows, S_alloc, KV,
+Dh], ...}`` shared by many documents — row ``slots[b]`` belongs to batch
+row ``b`` (the last arena row is the serving scratch/padding sentinel).
+Chunk and decode KV are scattered into the addressed rows in place and
+attention reads the arena through the paged kernels
+(``ops.attention_paged`` / ``ops.arena_decode_attention``) — no [B, S]
+gather copy.  Paged mode supports full causal attention only (no sliding
+window / cross-attention); ``models.model.LM.supports_paged_kv`` gates it.
 """
 from __future__ import annotations
 
@@ -111,6 +121,7 @@ def attention_apply(
     q_offset: int = 0,               # static, mode=extend
     kv_len: Optional[jnp.ndarray] = None,      # [B] true (unpadded) length
                                                # incl. this chunk, mode=extend
+    slots: Optional[jnp.ndarray] = None,       # [B] arena rows (paged serving)
     want_cache: bool = False,
     qk_norm: bool = False,
     theta: float = 10_000.0,
@@ -159,18 +170,34 @@ def attention_apply(
                 kk = k[:, -s_keep:]
                 vv = v[:, -s_keep:]
                 pos_tail = positions[:, -s_keep:]
-                slots = pos_tail % window                       # [B, s_keep]
+                ring = pos_tail % window                        # [B, s_keep]
                 ck = jnp.zeros((B, window) + k.shape[2:], k.dtype)
                 cv = jnp.zeros_like(ck)
                 bidx = jnp.arange(B)[:, None]
-                ck = ck.at[bidx, slots].set(kk)
-                cv = cv.at[bidx, slots].set(vv)
+                ck = ck.at[bidx, ring].set(kk)
+                cv = cv.at[bidx, ring].set(vv)
                 new_cache = {"k": ck, "v": cv}
             else:
                 new_cache = {"k": k, "v": v}
     elif mode == "extend":
         assert cache is not None
-        if window is not None and window > 0 and q_offset == 0:
+        if slots is not None:
+            # paged extend: ``cache`` is the slot arena [N_rows, S, KV, Dh];
+            # scatter the chunk's KV into the addressed rows, then attend
+            # in place through the paged kernel (no [B, S] gather)
+            assert window in (None, 0), \
+                "paged extend supports full attention only"
+            kv_valid = min(q_offset + S, cache["k"].shape[1])
+            ck = cache["k"].at[slots, q_offset:q_offset + S].set(k)
+            cv = cache["v"].at[slots, q_offset:q_offset + S].set(v)
+            out = ops.attention_paged(
+                q, ck, cv, slots, kv_valid=kv_valid, causal=causal,
+                q_offset=q_offset, kv_len=kv_len, impl=rt.attn_impl,
+                sm_scale=sm_scale, block_q=rt.block_q, block_kv=rt.block_kv,
+            )
+            if want_cache:
+                new_cache = {"k": ck, "v": cv}
+        elif window is not None and window > 0 and q_offset == 0:
             # fresh prefill routed through extend (cache preallocated but
             # empty): use the blocked kernel directly — the ragged
             # ring-merge path below would materialize [S, W+S] scores
@@ -187,10 +214,10 @@ def attention_apply(
                 kk = k[:, -s_keep:]
                 vv = v[:, -s_keep:]
                 pos_tail = positions[:, -s_keep:]
-                slots = pos_tail % Wn
+                ring = pos_tail % Wn
                 bidx = jnp.arange(B)[:, None]
-                ck = cache["k"].at[bidx, slots].set(kk)
-                cv = cache["v"].at[bidx, slots].set(vv)
+                ck = cache["k"].at[bidx, ring].set(kk)
+                cv = cache["v"].at[bidx, ring].set(vv)
                 new_cache = {"k": ck, "v": cv}
         elif window is not None and window > 0:
             # small-window extend: attend over ring cache + new chunk with
@@ -220,10 +247,10 @@ def attention_apply(
             pr = jax.nn.softmax(s, axis=-1)
             out = jnp.einsum("bhqk,bkhd->bqhd", pr, vf).astype(x.dtype)
             if want_cache:
-                slots = positions % window
+                ring = positions % window
                 bidx = jnp.arange(B)[:, None]
-                ck = cache["k"].at[bidx, slots].set(k)
-                cv = cache["v"].at[bidx, slots].set(v)
+                ck = cache["k"].at[bidx, ring].set(k)
+                cv = cache["v"].at[bidx, ring].set(v)
                 new_cache = {"k": ck, "v": cv}
         else:
             # full-attention extend: write new kv at [q_offset, q_offset+S)
@@ -246,27 +273,41 @@ def attention_apply(
         # rather than silently ignoring it
         assert kv_len is None, "kv_len is mode='extend' only; decode " \
             "masks by cache_len"
-        if window is not None and window > 0:
-            Wn = cache["k"].shape[1]
-            slots = (positions[:, 0] % Wn)
-            bidx = jnp.arange(B)
-            ck = cache["k"].at[bidx, slots].set(k[:, 0])
-            cv = cache["v"].at[bidx, slots].set(v[:, 0])
-            kv_valid = jnp.minimum(cache_len + 1, Wn)
-        else:
-            bidx = jnp.arange(B)
-            ck = cache["k"].at[bidx, cache_len].set(k[:, 0])
-            cv = cache["v"].at[bidx, cache_len].set(v[:, 0])
-            kv_valid = cache_len + 1
-        if rt.sp_decode and rt.mesh is not None and window in (None, 0):
-            from ..distributed.collectives import sp_decode_attention
-            out1 = sp_decode_attention(
-                q[:, 0], ck, cv, kv_valid, mesh=rt.mesh, sm_scale=sm_scale)
-        else:
-            out1 = ops.decode_attention(
-                q[:, 0], ck, cv, kv_valid, sm_scale=sm_scale,
+        if slots is not None:
+            # paged decode: write the token's KV at (slots[b], cache_len[b])
+            # and read the arena in place — slot ids resolve inside the
+            # kernel (scalar-prefetch SMEM), eliminating the gather copy
+            assert window in (None, 0), \
+                "paged decode supports full attention only"
+            ck = cache["k"].at[slots, cache_len].set(k[:, 0])
+            cv = cache["v"].at[slots, cache_len].set(v[:, 0])
+            out1 = ops.arena_decode_attention(
+                q[:, 0], ck, cv, slots, cache_len + 1, sm_scale=sm_scale,
                 impl=rt.attn_impl, block_kv=rt.block_kv,
             )
+        else:
+            if window is not None and window > 0:
+                Wn = cache["k"].shape[1]
+                ring = (positions[:, 0] % Wn)
+                bidx = jnp.arange(B)
+                ck = cache["k"].at[bidx, ring].set(k[:, 0])
+                cv = cache["v"].at[bidx, ring].set(v[:, 0])
+                kv_valid = jnp.minimum(cache_len + 1, Wn)
+            else:
+                bidx = jnp.arange(B)
+                ck = cache["k"].at[bidx, cache_len].set(k[:, 0])
+                cv = cache["v"].at[bidx, cache_len].set(v[:, 0])
+                kv_valid = cache_len + 1
+            if rt.sp_decode and rt.mesh is not None and window in (None, 0):
+                from ..distributed.collectives import sp_decode_attention
+                out1 = sp_decode_attention(
+                    q[:, 0], ck, cv, kv_valid, mesh=rt.mesh,
+                    sm_scale=sm_scale)
+            else:
+                out1 = ops.decode_attention(
+                    q[:, 0], ck, cv, kv_valid, sm_scale=sm_scale,
+                    impl=rt.attn_impl, block_kv=rt.block_kv,
+                )
         out = out1[:, None]
         new_cache = {"k": ck, "v": cv}
     else:

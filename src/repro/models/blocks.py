@@ -178,6 +178,7 @@ def block_apply(
     cache_len: Optional[jnp.ndarray] = None,
     q_offset: int = 0,
     kv_len: Optional[jnp.ndarray] = None,      # [B] true length, mode=extend
+    slots: Optional[jnp.ndarray] = None,       # [B] arena rows (paged serving)
     positions: Optional[jnp.ndarray] = None,
     positions3: Optional[jnp.ndarray] = None,
     dp_spec=None,
@@ -191,6 +192,8 @@ def block_apply(
         attn_mode = {"train": "full", "prefill": "full",
                      "extend": "extend", "decode": "decode"}[mode]
         window = b.sliding_window if kind == ATTN_LOCAL else None
+        assert slots is None or (kind == ATTN_FULL and window is None), \
+            "paged serving (slots) supports full-attention blocks only"
         mix, new_state = attention_apply(
             p["attn"], h,
             rt=rt,
@@ -204,20 +207,27 @@ def block_apply(
             cache_len=cache_len,
             q_offset=q_offset,
             kv_len=kv_len,
+            slots=slots,
             want_cache=(mode != "train"),
             qk_norm=b.qk_norm,
             theta=b.rope_theta,
             norm_eps=b.norm_eps,
         )
     elif kind == MLSTM:
+        assert slots is None, \
+            "paged serving (slots) supports attention-state models only"
         mix, new_state = ssm.mlstm_apply(
             p["mlstm"], h, state=state,
             mode=("step" if mode == "decode" else "full"),
             heads=b.num_heads)
     elif kind == SLSTM:
+        assert slots is None, \
+            "paged serving (slots) supports attention-state models only"
         mix, new_state = ssm.slstm_apply(
             p["slstm"], h, state=state, heads=b.num_heads)
     elif kind == RGLRU:
+        assert slots is None, \
+            "paged serving (slots) supports attention-state models only"
         mix, new_state = ssm.rglru_apply(
             p["rglru"], h, state=state,
             mode=("step" if mode == "decode" else "full"))

@@ -166,6 +166,55 @@ class LM:
                 out.append(leaf.at[:, idx].set(sub.astype(leaf.dtype)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    @property
+    def supports_paged_kv(self) -> bool:
+        """True when every layer's serve-state is a full-attention KV
+        cache, i.e. the slot arena can be addressed IN PLACE by the paged
+        kernels (``slots=`` on ``extend``/``decode_step``) and the
+        KV-window helpers below are meaningful.  Sliding-window ring
+        caches and recurrent (xLSTM/RG-LRU) states still require the
+        gather/scatter path."""
+        return all(k == ATTN_FULL for k in self.rcfg.base.layer_kinds())
+
+    def _kv_window_idx(self, slots: jnp.ndarray, start: jnp.ndarray,
+                       length: int):
+        win = start[:, None] + jnp.arange(length, dtype=jnp.int32)[None]
+        return slots[:, None], win                       # [B, 1], [B, L]
+
+    def take_kv_window(self, states, slots: jnp.ndarray,
+                       start: jnp.ndarray, length: int):
+        """Gather cache rows [start[b], start[b]+length) of every KV leaf
+        at arena rows ``slots`` -> a tiny [B, length, KV, Dh]-per-leaf
+        pytree.  With ``put_kv_window`` this is the paged op-suffix UNDO
+        LOG: the serving engine snapshots the ``length`` cache positions
+        an operation suffix will dirty, decodes in place, then restores —
+        O(B * op_len) bytes instead of the full [B, S] row copy.  Only
+        valid for ``supports_paged_kv`` models (every leaf is a KV cache
+        whose sequence axis follows the batch axis)."""
+        si, win = self._kv_window_idx(slots, start, length)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+        out = [leaf[si, win] if self._state_batch_axis(path) == 0
+               else leaf[:, si, win]
+               for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def put_kv_window(self, states, slots: jnp.ndarray,
+                      start: jnp.ndarray, length: int, window):
+        """Scatter a ``take_kv_window`` snapshot back into the arena.
+        Duplicate rows (scratch-slot padding) are permitted; which
+        duplicate wins is unspecified — scratch contents are never read
+        unmasked."""
+        si, win = self._kv_window_idx(slots, start, length)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+        subs = jax.tree.leaves(window)
+        out = []
+        for (path, leaf), sub in zip(flat, subs):
+            if self._state_batch_axis(path) == 0:
+                out.append(leaf.at[si, win].set(sub))
+            else:
+                out.append(leaf.at[:, si, win].set(sub))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def state_specs(self, *, batch_sharded: bool, seq_sharded: bool):
         def with_lead(tree):
             return jax.tree.map(
@@ -214,7 +263,8 @@ class LM:
 
     # ------------------------------------------------------------------ core
     def _run_blocks(self, params, x, *, mode, states=None, cache_len=None,
-                    q_offset=0, kv_len=None, positions=None, positions3=None):
+                    q_offset=0, kv_len=None, slots=None, positions=None,
+                    positions3=None):
         rcfg, rt = self.rcfg, self.rt
         dp_spec = self._dp_spec()
         pattern = self.pattern
@@ -229,8 +279,9 @@ class LM:
                 x, ns, a = blocks.block_apply(
                     stage_params[pi], x, kind=kind, rcfg=rcfg, rt=rt,
                     mode=mode, state=st, cache_len=cache_len,
-                    q_offset=q_offset, kv_len=kv_len, positions=positions,
-                    positions3=positions3, dp_spec=dp_spec)
+                    q_offset=q_offset, kv_len=kv_len, slots=slots,
+                    positions=positions, positions3=positions3,
+                    dp_spec=dp_spec)
                 x = self._constrain_act(x)
                 new_states.append(ns)
                 aux = aux + a
@@ -278,8 +329,8 @@ class LM:
             x, ns, a = blocks.block_apply(
                 params["tail"][ti], x, kind=kind, rcfg=rcfg, rt=rt,
                 mode=mode, state=st, cache_len=cache_len, q_offset=q_offset,
-                kv_len=kv_len, positions=positions, positions3=positions3,
-                dp_spec=dp_spec)
+                kv_len=kv_len, slots=slots, positions=positions,
+                positions3=positions3, dp_spec=dp_spec)
             x = self._constrain_act(x)
             new_tail.append(ns)
             aux = aux + a
@@ -342,7 +393,8 @@ class LM:
         return logits, new_states
 
     def extend(self, params, batch: Dict[str, jnp.ndarray], states,
-               q_offset: int, kv_len: Optional[jnp.ndarray] = None):
+               q_offset: int, kv_len: Optional[jnp.ndarray] = None,
+               slots: Optional[jnp.ndarray] = None):
         """Cascade fraction-extension: new tokens at [q_offset, q_offset+S).
 
         ``kv_len`` [B] is the TRUE (unpadded) sequence length including this
@@ -350,13 +402,19 @@ class LM:
         every query, so padded rows cannot attend to PAD KV written by
         earlier chunks (the serving engine passes per-document true lengths;
         None keeps the unmasked fast path for exact-length callers).
+
+        ``slots`` [B] switches to PAGED mode: ``states`` is the slot arena
+        (batch dim = arena rows) and row ``slots[b]`` is extended in place
+        — the chunk's KV scatters into the arena and attention reads it
+        through the paged kernels, so no per-launch row gather/scatter is
+        needed.  Requires ``supports_paged_kv``.
         """
         x = self.embed_inputs(params, batch)
         B, S, _ = x.shape
         positions = q_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         x, new_states, _ = self._run_blocks(
             params, x, mode="extend", states=states, q_offset=q_offset,
-            kv_len=kv_len, positions=positions,
+            kv_len=kv_len, slots=slots, positions=positions,
             positions3=batch.get("positions3"),
             cache_len=jnp.full((B,), q_offset, jnp.int32))
         x = rmsnorm_apply(params["final_norm"], x[:, -1:],
@@ -366,8 +424,14 @@ class LM:
         return logits, new_states
 
     def decode_step(self, params, tokens: jnp.ndarray, states,
-                    pos: jnp.ndarray):
-        """One decode step. tokens [B], pos [B] -> (logits [B, V], states)."""
+                    pos: jnp.ndarray, slots: Optional[jnp.ndarray] = None):
+        """One decode step. tokens [B], pos [B] -> (logits [B, V], states).
+
+        ``slots`` [B] switches to PAGED mode: ``states`` is the slot arena
+        and the step reads/writes row ``slots[b]`` in place (the token's
+        KV lands at position ``pos[b]`` of that row; callers that must not
+        dirty the row — the serving op suffix — bracket the steps with
+        ``take_kv_window``/``put_kv_window``)."""
         x = embed_apply(params["embed"], tokens[:, None]).astype(self.dtype)
         if getattr(self.rcfg.base, "embed_scale", False):
             x = x * jnp.asarray(self.rcfg.base.d_model ** 0.5, self.dtype)
@@ -378,7 +442,7 @@ class LM:
                 pos[:, None, None], (pos.shape[0], 1, 3)).astype(jnp.int32)
         x, new_states, _ = self._run_blocks(
             params, x, mode="decode", states=states, cache_len=pos,
-            positions=positions, positions3=positions3)
+            slots=slots, positions=positions, positions3=positions3)
         x = rmsnorm_apply(params["final_norm"], x, self.rcfg.base.norm_eps)
         logits = lm_head_apply(params["embed"], x,
                                self.rcfg.base.logit_softcap)[:, 0]

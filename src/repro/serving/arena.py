@@ -4,17 +4,28 @@ One ``BucketArena`` per (backend, length bucket): a batched state pytree of
 shape ``[n_slots + 1, ..., s_alloc, ...]`` preallocated on device.  Each
 live document owns one slot for its lifetime (``scheduler.SlotAllocator``);
 the last row is a *scratch slot* used to pad partial batches up to the
-static launch width, so every launch gathers/scatters exactly ``B`` rows
-and scatter writes from padding land harmlessly in scratch.
+static launch width, so every launch addresses exactly ``B`` rows and
+writes from padding land harmlessly in scratch.  The scratch row index
+(``n_slots`` == ``capacity``) is the one legal out-of-document sentinel
+of the kernel slot contract (``kernels.ops``): slot ids must lie in
+``[0, capacity]``, duplicates are allowed only for scratch, and scratch
+contents are never read unmasked.
 
 Slot lifecycle
 --------------
   alloc   first time a document's bucket is touched by any launch;
   fill    ``extend`` writes the fraction slice [cached_len, f_len) into the
           slot (cached_len == 0 is prefill-into-arena);
-  reuse   later launches gather the slot, extend the suffix, scatter back —
-          operation suffixes are decoded against a *gathered copy* and
-          dropped, so the document prefix in the arena stays pristine;
+  reuse   later launches address the slot again.  On the PAGED data plane
+          (Pallas runtimes) nothing is copied: the extend scatters only
+          the new chunk's KV into the row and the kernels read the arena
+          in place through slot ids in scalar-prefetch SMEM; operation
+          suffixes decode in place behind a tiny [B, op_len] KV-window
+          undo log (save -> decode -> restore), so the document prefix
+          stays bitwise pristine.  The gather plane (reference / CPU)
+          instead gathers the rows, extends the copy, scatters back, and
+          drops the op-suffix copy — same contract, O(B * s_alloc) copy
+          traffic per launch;
   free    the document exits the cascade; the slot returns to the free
           list and may be re-issued to a new document (streaming);
   evict   under slot-budget pressure the backend preempts the lowest-

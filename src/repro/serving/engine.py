@@ -11,8 +11,11 @@ operations in the token stream, so
   * switching operations on the same model at the same fraction re-runs
     ONLY the operation tokens against the cached document KV;
   * the engine never merges operation tokens into the cached document
-    state (op suffixes decode against a gathered *copy* of the slot states
-    and are dropped), exactly mirroring the doc-before-op prompt layout.
+    state, exactly mirroring the doc-before-op prompt layout: on the
+    paged data plane op suffixes decode over the arena in place behind a
+    tiny KV-window undo log, on the gather plane against a row copy that
+    is dropped — either way the cached document prefix survives bitwise
+    untouched.
 
 Multi-tenant serving API
 ------------------------
@@ -77,6 +80,21 @@ scalar-prefetch ``kv_len``), and the operation suffix runs as masked
 decode steps whose per-document ``kv_len`` rides through
 ``kernels/decode_attention.py``.
 
+Paged data plane (default on Pallas runtimes, for models whose
+serve-state is all full-attention KV caches): the stage step never
+copies arena rows.  Per-sequence slot ids ride in scalar-prefetch SMEM
+beside ``kv_len`` and the paged kernels
+(``ops.arena_decode_attention`` / ``ops.attention_paged``) DMA
+``k_arena[slot]`` blocks directly, so extend scatters only the chunk's
+KV and decode reads the arena in place — per-launch copy traffic drops
+from O(batch * s_alloc) (the gather/scatter of whole rows) to the
+O(batch * op_len) op-suffix undo log (see ``LMBackend.paged_step``'s
+comments; ``gather_bytes_per_launch`` vs ``paged_copy_bytes_per_launch``
+quantify it).  Results are BITWISE identical to the gather plane —
+preds, confs, per-document $, and the arena contents itself — which
+``tests/test_serving.py`` asserts; the gather step survives as the
+reference/CPU plane (``paged=False``, XLA/naive impls).
+
 Token accounting (new vs cached, true unpadded counts), per-stage $ cost,
 per-document latencies, evictions, and retired buckets are recorded in a
 per-query ``ServeStats`` with the same rates as the analytical cost
@@ -127,6 +145,12 @@ class LMBackend:
     slot_budget: Optional[int] = None  # max live slots across buckets
     byte_budget: Optional[int] = None  # max device bytes across arenas
     retire_after: int = 64           # idle launches before bucket retirement
+    # Paged data plane: None = auto (on for Pallas runtimes when the model
+    # is paged-capable — every serve-state leaf a full-attention KV cache).
+    # True forces it (XLA/naive impls fall back to a per-call gather inside
+    # the kernels wrappers — reference semantics, not the fast path); False
+    # forces the PR-1 gather/scatter stage step.
+    paged: Optional[bool] = None
     _arenas: Dict[int, BucketArena] = field(default_factory=dict)
     _alloc: SlotAllocator = field(default_factory=SlotAllocator)
     _doc_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
@@ -352,11 +376,26 @@ class LMBackend:
         return slot
 
     # --------------------------------------------------------------- compute
+    def uses_paged_kv(self) -> bool:
+        """Resolve the ``paged`` switch (None = auto): the paged stage step
+        needs a paged-capable model and pays off when the kernels resolve
+        slots in-kernel, i.e. on Pallas runtimes."""
+        if self.paged is None:
+            impl = getattr(getattr(self.model, "rt", None), "attn_impl", "")
+            self.paged = bool(
+                impl.startswith("pallas")
+                and getattr(self.model, "supports_paged_kv", False))
+        if self.paged:
+            assert getattr(self.model, "supports_paged_kv", False), \
+                "paged=True requires a model whose serve-state is all " \
+                "full-attention KV caches (LM.supports_paged_kv)"
+        return self.paged
+
     def _build_step(self):
         model = self.model
 
-        def step(params, arena_states, slots, new_tok, op_tok, kv_true,
-                 ext_true, *, c_len: int, op_len: int):
+        def gather_step(params, arena_states, slots, new_tok, op_tok,
+                        kv_true, ext_true, *, c_len: int, op_len: int):
             st = model.take_states(arena_states, slots)
             if new_tok.shape[1] > 0:
                 # prefill (c_len == 0) / fraction-extend into the arena;
@@ -376,10 +415,60 @@ class LMBackend:
                 logits, st = model.decode_step(params, tok, st, pos + t)
             return logits, arena_states
 
+        def paged_step(params, arena_states, slots, new_tok, op_tok,
+                       kv_true, ext_true, *, c_len: int, op_len: int):
+            # PAGED data plane: the arena is never row-copied.  The extend
+            # scatters only the chunk's KV into the addressed rows and the
+            # kernels DMA arena blocks through slot ids in scalar-prefetch
+            # SMEM, so per-launch HBM traffic is the attended blocks — not
+            # a [B, s_alloc] gather + scatter of whole rows.
+            if new_tok.shape[1] > 0:
+                _, arena_states = model.extend(
+                    params, {"tokens": new_tok}, arena_states,
+                    q_offset=c_len, kv_len=ext_true, slots=slots)
+            # operation suffix: masked decode steps run IN PLACE over the
+            # arena.  The op tokens' KV lands at [kv_true, kv_true+op_len)
+            # of each row — positions that may hold live document KV (the
+            # true fraction can undershoot the padded cache) — so the
+            # window is snapshotted first and restored after: an O(B *
+            # op_len) undo log instead of an O(B * s_alloc) row copy, and
+            # the arena leaves the step bitwise identical to the gather
+            # path's.
+            logits = None
+            pos = kv_true.astype(jnp.int32)
+            B = slots.shape[0]
+            saved = model.take_kv_window(arena_states, slots, pos, op_len)
+            for t in range(op_len):
+                tok = jnp.broadcast_to(op_tok[t], (B,))
+                logits, arena_states = model.decode_step(
+                    params, tok, arena_states, pos + t, slots=slots)
+            arena_states = model.put_kv_window(arena_states, slots, pos,
+                                               op_len, saved)
+            return logits, arena_states
+
+        step = paged_step if self.uses_paged_kv() else gather_step
         kwargs: Dict[str, Any] = {"static_argnames": ("c_len", "op_len")}
         if jax.default_backend() != "cpu":      # CPU donation only warns
             kwargs["donate_argnums"] = (1,)
         return jax.jit(step, **kwargs)
+
+    # ----------------------------------------------------- paged accounting
+    def gather_bytes_per_launch(self, bucket: int, batch: int) -> int:
+        """Device bytes the GATHER stage step copies per launch just to
+        address the arena: ``take_states`` materializes a [batch, s_alloc]
+        row copy of every state leaf (and extend scatters it back).
+        Decode-only launches pay this too.  The paged step eliminates it."""
+        return batch * self.slot_nbytes(bucket)
+
+    def paged_copy_bytes_per_launch(self, bucket: int, batch: int,
+                                    op_len: int) -> int:
+        """Bytes the PAGED stage step copies per launch: the op-suffix
+        undo log (save + restore of the ``op_len`` dirtied cache rows).
+        Zero bytes scale with the cache/bucket size — the arena itself is
+        read in place by the kernels."""
+        s_alloc = self._s_alloc_for(bucket)
+        row = self.slot_nbytes(bucket)
+        return 2 * batch * op_len * (row // s_alloc)
 
     def class_confidences(self, logits: jnp.ndarray, n_classes: int
                           ) -> Tuple[np.ndarray, np.ndarray]:

@@ -163,6 +163,135 @@ def test_arena_decode_attention_gathers_slots():
                                atol=2e-5, rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Paged kernels: in-kernel slot lookup over the arena (no gather copy)
+# ---------------------------------------------------------------------------
+
+def _mk_arena(key, N, S, Hkv, Dh):
+    k_arena = jax.random.normal(jax.random.fold_in(key, 1),
+                                (N, S, Hkv, Dh), jnp.float32)
+    v_arena = jax.random.normal(jax.random.fold_in(key, 2),
+                                (N, S, Hkv, Dh), jnp.float32)
+    return k_arena, v_arena
+
+
+@pytest.mark.parametrize("slots,kv_len", [
+    # permuted, duplicate-free slots; ragged kv_len incl. full and tiny
+    ([4, 0, 2], [10, 64, 7]),
+    # scratch row (n_slots = N-1) as padding sentinel, duplicated
+    ([4, 4, 4], [1, 1, 64]),
+    # batch larger than slot count is no constraint either way
+    ([3, 1, 0], [64, 33, 16]),
+])
+def test_paged_decode_bitwise_equals_gather(slots, kv_len):
+    """The paged decode kernel (slots in scalar-prefetch SMEM) is BITWISE
+    identical to gathering the rows and running the dense kernel — the
+    serving engine's paged/gather parity rests on this."""
+    N, B, S, Hq, Hkv, Dh = 5, 3, 64, 4, 2, 16   # N not a multiple of B
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S, Hkv, Dh)
+    slots = jnp.asarray(slots, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    out_paged = ops.arena_decode_attention(
+        q, k_arena, v_arena, slots, kv_len,
+        impl="pallas_interpret", block_kv=16)
+    out_gather = ops.decode_attention(
+        q, k_arena[np.asarray(slots)], v_arena[np.asarray(slots)], kv_len,
+        impl="pallas_interpret", block_kv=16)
+    np.testing.assert_array_equal(np.asarray(out_paged),
+                                  np.asarray(out_gather))
+    out_ref = ref.decode_reference(
+        q, k_arena[np.asarray(slots)], v_arena[np.asarray(slots)],
+        kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_ref),
+                               atol=2e-5, rtol=1e-2)
+
+
+def test_paged_decode_ragged_arena_falls_back_to_gather():
+    """S not a kv-block multiple: the entry point silently uses the
+    gather + padded dense kernel (only non-Pallas-built arenas hit this)."""
+    N, B, S, Hq, Hkv, Dh = 4, 2, 72, 4, 2, 16   # 72 % 16 != 0
+    key = jax.random.PRNGKey(10)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S, Hkv, Dh)
+    slots = jnp.asarray([3, 1], jnp.int32)
+    kv_len = jnp.asarray([40, 72], jnp.int32)
+    out = ops.arena_decode_attention(q, k_arena, v_arena, slots, kv_len,
+                                     impl="pallas_interpret", block_kv=16)
+    out_ref = ref.decode_reference(
+        q, k_arena[np.asarray(slots)], v_arena[np.asarray(slots)],
+        kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=2e-5, rtol=1e-2)
+
+
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+@pytest.mark.parametrize("bad", [[-1, 0, 1], [5, 0, 1], [0, 99, 1]])
+def test_paged_decode_rejects_out_of_range_slots(impl, bad):
+    """Concrete out-of-range slot ids raise instead of clipping silently
+    (the jnp.take clip / arbitrary-DMA failure mode of the old gather)."""
+    N, B, S, Hq, Hkv, Dh = 5, 3, 32, 4, 2, 16
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S, Hkv, Dh)
+    kv_len = jnp.asarray([4, 8, 2], jnp.int32)
+    with pytest.raises(ValueError, match="scratch row"):
+        ops.arena_decode_attention(q, k_arena, v_arena,
+                                   jnp.asarray(bad, jnp.int32), kv_len,
+                                   impl=impl, block_kv=16)
+
+
+@pytest.mark.parametrize("q_off,Sq,kv_valid", [
+    (0, 16, 16),       # prefill-into-arena (cached_len == 0)
+    (16, 16, 32),      # mid-cascade fraction extension
+    (48, 16, 64),      # extension reaching the end of the bucket
+])
+def test_paged_extend_bitwise_equals_gather(q_off, Sq, kv_valid):
+    """Paged flash extend == dense flash on the gathered slice, bitwise,
+    with ragged per-row kv_len masking bucket PAD inside the chunk."""
+    N, B, S_alloc, Hq, Hkv, Dh = 6, 3, 64, 4, 2, 16
+    key = jax.random.PRNGKey(12)
+    q = jax.random.normal(key, (B, Sq, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S_alloc, Hkv, Dh)
+    slots = jnp.asarray([5, 0, 3], jnp.int32)   # scratch row 5 included
+    kv_len = jnp.asarray([kv_valid, max(q_off - 3, 1), q_off + 5],
+                         jnp.int32)
+    out_paged = ops.attention_paged(
+        q, k_arena, v_arena, slots, kv_valid=kv_valid, q_offset=q_off,
+        kv_len=kv_len, impl="pallas_interpret", block_q=16, block_kv=16)
+    kg = k_arena[np.asarray(slots)][:, :kv_valid]
+    vg = v_arena[np.asarray(slots)][:, :kv_valid]
+    out_dense = ops.attention(
+        q, kg, vg, causal=True, q_offset=q_off, kv_len=kv_len,
+        impl="pallas_interpret", block_q=16, block_kv=16)
+    np.testing.assert_array_equal(np.asarray(out_paged),
+                                  np.asarray(out_dense))
+    out_ref = ref.mha_reference(q, kg, vg, causal=True, q_offset=q_off,
+                                kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_ref),
+                               atol=3e-5, rtol=1e-3)
+
+
+def test_paged_extend_xla_fallback_matches_reference():
+    """The gather fallback of ``attention_paged`` (CPU/reference impls)."""
+    N, B, S_alloc, Hq, Hkv, Dh = 4, 2, 64, 4, 2, 16
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (B, 16, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S_alloc, Hkv, Dh)
+    slots = jnp.asarray([2, 3], jnp.int32)
+    kv_len = jnp.asarray([30, 17], jnp.int32)
+    out = ops.attention_paged(q, k_arena, v_arena, slots, kv_valid=32,
+                              q_offset=16, kv_len=kv_len, impl="xla",
+                              block_q=16, block_kv=16)
+    kg = k_arena[np.asarray(slots)][:, :32]
+    vg = v_arena[np.asarray(slots)][:, :32]
+    out_ref = ref.mha_reference(q, kg, vg, causal=True, q_offset=16,
+                                kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=3e-5, rtol=1e-3)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     b=st.integers(1, 2),

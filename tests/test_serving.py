@@ -619,3 +619,103 @@ def test_request_queue_largest_ready_group_policy():
                           tok_len=dict(r.tok_len)))
     assert q.next_launch(lambda r: cfg[r.stage], batch_size=8).doc_ids \
         == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Paged data plane: in-kernel slot lookup vs the gather/scatter stage step
+# ---------------------------------------------------------------------------
+
+from repro.models.runtime import Runtime  # noqa: E402
+
+_PAGED_RT = Runtime(attn_impl="pallas_interpret", block_q=16, block_kv=16,
+                    remat=False)
+
+
+def _mk_paged_engine(paged, batch_size=4):
+    """Two engines differing ONLY in the data plane: paged vs gather."""
+    tokz = HashWordTokenizer(vocab_size=512)
+
+    def be(name, seed):
+        cfg = get_reduced("llama3_2_1b", dtype="float32", vocab_size=512,
+                          num_layers=2)
+        m = LM(resolve(cfg, tp=1), _PAGED_RT)
+        return LMBackend(
+            name=name, model=m, params=m.init(jax.random.PRNGKey(seed)),
+            tokenizer=tokz,
+            rate_per_token=1.0 if name == "oracle" else 0.06,
+            s_alloc=512, paged=paged)
+
+    return CascadeEngine({"proxy": be("proxy", 1), "oracle": be("oracle", 2)},
+                         OPS, n_classes=2, batch_size=batch_size)
+
+
+# word counts straddle two buckets (32, 64); 50 makes the true fraction
+# undershoot the padded one (ceil(50 * 0.25) = 13 < 16), so the op suffix
+# decodes over positions holding LIVE document KV — the paged undo log's
+# hard case
+_PAGED_DOCS = {i: " ".join(f"w{i}x{j}" for j in range(n))
+               for i, n in enumerate([20, 40, 28, 50, 12])}
+
+
+def test_paged_engine_bitwise_parity_with_gather():
+    """impl='pallas_interpret': the paged stage step (extend scatters the
+    chunk in place, op suffix decodes over the arena behind the KV-window
+    undo log) produces BITWISE identical preds/confs/per-doc $ to the
+    PR-1 gather/scatter step — including an op-switch decode-only stage
+    whose true fraction undershoots the cached padded fraction."""
+    thr = {0: 2.0, 1: 2.0}       # impossible: every doc walks every stage
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "sur_1", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),   # decode-only
+        Task(TaskConfig("proxy", "o_orig", 0.5), thr),    # re-entry extend
+    ])
+    results = {}
+    for paged in (False, True):
+        eng = _mk_paged_engine(paged)
+        assert eng.backends["proxy"].uses_paged_kv() == paged
+        results[paged] = eng.run(ladder, _PAGED_DOCS)
+    gather, paged = results[False], results[True]
+    assert gather.pred == paged.pred
+    assert gather.conf == paged.conf           # bitwise (python floats)
+    assert gather.doc_cost == paged.doc_cost
+    assert gather.cost == paged.cost
+    assert gather.stats.batches == paged.stats.batches
+
+
+def test_paged_op_suffix_leaves_arena_bitwise_pristine():
+    """A decode-only op launch must not perturb the cached document rows:
+    the undo log restores every dirtied position, so a second identical
+    launch sees a bitwise-identical arena (same confidences out)."""
+    eng = _mk_paged_engine(True)
+    be = eng.backends["proxy"]
+    d0 = 0
+    toks = {d0: np.asarray(be.tokenizer.encode(_PAGED_DOCS[d0]), np.int32)}
+    blen = bucket_len(len(toks[d0]))
+    op = np.asarray(be.tokenizer.encode(OPS["o_orig"]), np.int32)
+    be.run_stage([d0], toks, blen, 0.25, op, 2)       # prefill + op
+    bucket_arena = be._arenas[blen]
+    before = [np.asarray(l).copy()
+              for l in jax.tree.leaves(bucket_arena.states)]
+    _, c1, *_ = be.run_stage([d0], toks, blen, 0.25, op, 2)  # decode-only
+    after = [np.asarray(l) for l in jax.tree.leaves(bucket_arena.states)]
+    slot = be._doc_slot[d0][1]
+    for b, a in zip(before, after):
+        ax = 1 if b.ndim == 5 else 0          # scan-stacked vs tail leaves
+        np.testing.assert_array_equal(np.take(b, [slot], ax),
+                                      np.take(a, [slot], ax))
+    _, c2, *_ = be.run_stage([d0], toks, blen, 0.25, op, 2)
+    np.testing.assert_array_equal(c1, c2)
+
+
+def test_paged_gather_bytes_accounting():
+    """The copy-traffic model behind the benchmark's paged section: the
+    gather step moves whole [B, s_alloc] rows per launch, the paged step
+    only the op-suffix undo log."""
+    eng = _mk_paged_engine(True)
+    be = eng.backends["proxy"]
+    g = be.gather_bytes_per_launch(64, 4)
+    assert g == 4 * be.slot_nbytes(64)
+    p = be.paged_copy_bytes_per_launch(64, 4, 6)
+    s_alloc = be._s_alloc_for(64)
+    assert p == 2 * 4 * 6 * (be.slot_nbytes(64) // s_alloc)
+    assert p < g // 8                          # undo log is tiny vs rows
