@@ -47,6 +47,18 @@ Decode-only launch latency is A/B-measured on both planes, and a
 pallas_interpret mini-engine asserts the two planes are bitwise-identical
 (preds/confs/per-doc $).
 
+Chaos section (PR 6): seeded fault injection (``serving.faults``) over a
+two-tenant workload — launch failures, NaN confidences, latency spikes,
+one arena-loss event, one expired deadline — asserting the
+fault-tolerance invariants: every submitted document reaches a terminal
+state (RESOLVED/FAILED/TIMED_OUT), per-query and per-document
+$-accounting replay the billing ledger EXACTLY, and a mid-flight crash
+warm-restarts from the write-ahead journal with resolved documents
+restored verbatim.  ``--chaos-seed`` picks the schedule; ``--chaos-only``
+runs just this section (fast CI job).  Injection runs on separate
+backends after the fault-free metrics, so the fault-free smoke summary
+stays byte-identical to the committed baseline.
+
 Reports p50/p99 per-document latency (scheduled arrival -> resolution),
 docs/sec, cache-hit rate, and $-cost per control plane.  Engines are
 compile-warmed on the same corpus before the timed pass.
@@ -86,8 +98,11 @@ from repro.launch.serve import (drive_request_loop, drive_server,
                                 poisson_arrivals, warm_arena)
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST, Runtime
-from repro.serving.engine import CascadeEngine, CascadeServer, LMBackend
+from repro.serving.engine import (CascadeEngine, CascadeServer, LMBackend,
+                                  RequestJournal)
+from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.legacy_engine import DictCacheLMBackend, SeedCascadeEngine
+from repro.serving.scheduler import TERMINAL_STATES, TIMED_OUT, RetryPolicy
 
 OPS = {
     "o_orig": "does this opinion overturn a lower court decision",
@@ -487,6 +502,133 @@ def run_paged_section(tokz, smoke: bool):
 
 
 # ---------------------------------------------------------------------------
+# Chaos section: seeded fault injection; terminal-state + accounting gates
+# ---------------------------------------------------------------------------
+
+CHAOS_DOCS = 12
+CHAOS_SEED = 23          # default --chaos-seed
+
+
+def _accounting_exact(server) -> bool:
+    """Replaying the billing ledger (same float additions, same order)
+    must reproduce per-query AND per-document $ EXACTLY — the chaos
+    invariant: however many retries/quarantines/recoveries happened,
+    every billed launch is attributed exactly once."""
+    per_q = {qid: 0.0 for qid in server._handles}
+    per_doc = {}
+    for _, qid, rid, cost in server.ledger():
+        per_q[qid] += cost
+        per_doc[rid] = per_doc.get(rid, 0.0) + cost
+    if any(total != server.cost(qid) for qid, total in per_q.items()):
+        return False
+    return all(per_doc.get(rid, 0.0) == req.cost
+               for rid, req in server._requests.items())
+
+
+def _chaos_server(models, tokz, journal=None):
+    return CascadeServer(
+        make_backends("arena", tokz, models), OPS, n_classes=2,
+        batch_size=GATE_BATCH,
+        # backoff 0 keeps the launch schedule (and so the fault schedule)
+        # a pure function of the chaos seed — no wall-clock in the loop
+        retry=RetryPolicy(max_retries=2, backoff_base=0.0), journal=journal)
+
+
+def _chaos_submit(server, docs):
+    """Two tenants, logical-tick arrivals; the first document of tenant 0
+    carries an already-expired deadline — a deterministic TIMED_OUT."""
+    cascades = tenant_cascades(GATE_TENANTS)
+    tdocs, order = _tenant_split(docs, GATE_TENANTS)
+    handles = [server.register(c) for c in cascades]
+    futs = {}
+    for k, h in enumerate(handles):
+        for j, d in enumerate(order[k]):
+            deadline = 0.0 if (k == 0 and j == 0) else None
+            futs[(h.query_id, d)] = h.submit(d, tdocs[k][d],
+                                             arrival=float(j),
+                                             deadline_s=deadline)
+    return handles, futs
+
+
+def run_chaos_section(chaos_seed: int, models, tokz):
+    """Fault-injected serving: every submitted document must reach a
+    terminal state (RESOLVED/FAILED/TIMED_OUT) and $-accounting must stay
+    exact; then a mid-flight "crash" is recovered from the write-ahead
+    journal.  All invariants are booleans gated by check_regression.py
+    (chaos COUNTS vary with the seed and are reported, not gated)."""
+    docs = {d.doc_id: d.text
+            for d in generate_corpus(CHAOS_DOCS, avg_lines=12,
+                                     seed=GATE_SEED)}
+    plan = FaultPlan(seed=chaos_seed, launch_failure_p=0.25, nan_p=0.15,
+                     latency_spike_p=0.1, spike_s=1e-4, arena_loss_at=4)
+
+    # ---- part A: chaotic drain on one server
+    server = _chaos_server(models, tokz)
+    inj = FaultInjector(plan).install(server)
+    handles, futs = _chaos_submit(server, docs)
+    server.drain()
+    statuses = {k: f.status for k, f in futs.items()}
+    agg = server.stats()
+    part_a = {
+        "all_docs_terminal": all(f.done for f in futs.values())
+        and all(s in TERMINAL_STATES for s in statuses.values()),
+        "accounting_exact": _accounting_exact(server),
+        "deadline_timed_out":
+            statuses[(handles[0].query_id, sorted(docs)[0])] == TIMED_OUT,
+        "arena_loss_injected": inj.counts["arena_losses"] == 1,
+    }
+    counters = {
+        "injected": dict(inj.counts),
+        "retries": agg.retries, "quarantines": agg.quarantines,
+        "timeouts": agg.timeouts, "failures": agg.failures,
+        "breaker_trips": agg.breaker_trips,
+        "recovered_docs": agg.recovered_docs,
+        "terminal_states": {s: sum(1 for v in statuses.values() if v == s)
+                            for s in sorted(set(statuses.values()))},
+    }
+
+    # ---- part B: crash mid-flight, warm-restart from the journal
+    crashed = _chaos_server(models, tokz, journal=RequestJournal())
+    FaultInjector(plan).install(crashed)
+    _chaos_submit(crashed, docs)
+    for _ in range(4):                      # partial progress, then "crash"
+        crashed.step()
+    journal = crashed.journal
+    pre = dict(journal.resolutions)
+
+    fresh = _chaos_server(models, tokz, journal=RequestJournal())
+    for c in tenant_cascades(GATE_TENANTS):     # same cascades, same order
+        fresh.register(c)
+    rec_futs = fresh.recover(journal)
+    restored_exact = all(
+        rec_futs[key].done
+        and rec_futs[key].status == res["status"]
+        and rec_futs[key].pred == res["pred"]
+        and rec_futs[key].cost == res["cost"]
+        for key, res in pre.items())
+    fresh.drain()
+    part_b = {
+        "recovery_all_terminal":
+            all(f.done and f.status in TERMINAL_STATES
+                for f in rec_futs.values()),
+        "recovery_restored_exact": restored_exact,
+        "recovery_accounting_exact": _accounting_exact(fresh),
+    }
+    counters["journal"] = {
+        "submitted": len(journal.submits),
+        "resolved_before_crash": len(pre),
+        "resubmitted": len(journal.submits) - len(pre),
+    }
+
+    section = {"seed": chaos_seed, "docs": CHAOS_DOCS, **part_a, **part_b,
+               "counters": counters}
+    invariants = [k for k in (*part_a, *part_b)]
+    failed = [k for k in invariants if section[k] is not True]
+    assert not failed, f"chaos invariants failed: {failed}"
+    return section
+
+
+# ---------------------------------------------------------------------------
 # Deterministic smoke-gate summary (CI benchmark-regression gate)
 # ---------------------------------------------------------------------------
 
@@ -498,7 +640,7 @@ GATE_SEED = 7
 GATE_TENANTS = 2
 
 
-def smoke_gate_summary(parity=None):
+def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED):
     """Timing-free, machine-comparable summary for the CI regression gate.
 
     Every metric here is DETERMINISTIC for a given source tree: corpora
@@ -507,6 +649,11 @@ def smoke_gate_summary(parity=None):
     interactive replay admits documents on logical ticks rather than the
     wall clock.  ``check_regression.py`` compares these against the
     committed baseline with explicit tolerances.
+
+    The ``chaos`` subsection runs the fault-injected workload
+    (``run_chaos_section``) on SEPARATE backends AFTER the fault-free
+    metrics are computed, so enabling injection cannot perturb them: the
+    fault-free summary stays byte-identical to the committed baseline.
 
     ``parity`` reuses a ``paged_parity_check()`` result already computed
     by ``run_paged_section`` (the pallas_interpret A/B is the slowest
@@ -562,7 +709,14 @@ def smoke_gate_summary(parity=None):
             int(be.paged_copy_bytes_per_launch(64, GATE_BATCH, len(op))),
         "parity": parity if parity is not None else paged_parity_check(),
     }
+
+    # -- chaos: fault-injected terminal-state + accounting invariants
+    # (separate backends, computed last — cannot perturb the fault-free
+    # metrics above)
+    chaos = run_chaos_section(chaos_seed, models, tokz)
+
     return {"static": static, "multi_tenant": multi_tenant, "paged": paged,
+            "chaos": chaos,
             "constants": {"docs": GATE_DOCS, "batch": GATE_BATCH,
                           "seed": GATE_SEED, "tenants": GATE_TENANTS}}
 
@@ -584,9 +738,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: assert non-empty stats and write "
                          "the deterministic gate summary only")
+    ap.add_argument("--chaos-seed", type=int, default=CHAOS_SEED,
+                    help="seed for the fault-injection chaos section")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run ONLY the chaos section (fast CI job): "
+                         "asserts all-docs-terminal + exact accounting "
+                         "under injected faults, writes {'chaos': ...}")
     args = ap.parse_args()
     if args.out is None:
-        args.out = "BENCH_smoke.json" if args.smoke \
+        args.out = "BENCH_chaos.json" if args.chaos_only \
+            else "BENCH_smoke.json" if args.smoke \
             else "BENCH_serve_engine.json"
     if args.smoke:
         args.docs = min(args.docs, 16)
@@ -595,6 +756,19 @@ def main():
 
     tokz = HashWordTokenizer(vocab_size=512)
     models = {"proxy": _model(1), "oracle": _model(2)}
+
+    if args.chaos_only:
+        print(f"== chaos (seed {args.chaos_seed}) ==", flush=True)
+        chaos = run_chaos_section(args.chaos_seed, models, tokz)
+        print(json.dumps(chaos, indent=2), flush=True)
+        with open(args.out, "w") as f:
+            json.dump({"chaos": chaos, "backend": jax.default_backend(),
+                       "generated_by":
+                           "benchmarks/serve_engine.py --chaos-only"}, f,
+                      indent=2)
+            f.write("\n")
+        print(f"chaos OK; wrote {args.out}")
+        return
     corpus = generate_corpus(args.docs, avg_lines=12, seed=args.seed)
     docs = {d.doc_id: d.text for d in corpus}
     cascade = forced_ladder()
@@ -670,7 +844,8 @@ def main():
     # ---- deterministic gate summary (fixed constants; CI compares this;
     # the parity A/B from the paged section is reused, not recomputed)
     print("== smoke gate (deterministic summary) ==", flush=True)
-    report["smoke"] = smoke_gate_summary(parity=report["paged"]["parity"])
+    report["smoke"] = smoke_gate_summary(parity=report["paged"]["parity"],
+                                         chaos_seed=args.chaos_seed)
     print(json.dumps(report["smoke"], indent=2), flush=True)
 
     if args.smoke:
@@ -691,6 +866,11 @@ def main():
             assert row["gather_copy_bytes_per_launch"] \
                 > row["paged_undo_log_bytes_per_launch"]
         assert all(report["paged"]["parity"].values())
+        # chaos: every injected-fault document terminal, $ exact, journal
+        # recovery intact (run_chaos_section asserts these too)
+        ch = report["smoke"]["chaos"]
+        assert ch["all_docs_terminal"] and ch["accounting_exact"]
+        assert ch["recovery_all_terminal"] and ch["recovery_restored_exact"]
         gate = {"smoke": report["smoke"],
                 "backend": report["backend"],
                 "generated_by": "benchmarks/serve_engine.py --smoke"}

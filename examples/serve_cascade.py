@@ -19,7 +19,14 @@ Pipeline (mirrors Figure 2 of the paper, end to end on CPU):
      both queries that share a static launch signature merge into ONE
      launch (cross-query packing over shared KV arenas); per-query
      latency (p50/p99), cost vs oracle-only, and cache hit rate come out
-     of each handle's own stats.
+     of each handle's own stats;
+  6. replay the same feed under INJECTED FAULTS (seeded launch failures,
+     NaN confidences, one arena loss) to show the failure model: every
+     document still reaches a terminal state — RESOLVED, FAILED, or
+     TIMED_OUT — via solo retries with backoff, non-finite-confidence
+     quarantine (solo retry, then escalate to the final stage), and
+     eviction-path arena recovery; then crash the server mid-flight and
+     warm-restart a fresh one from its write-ahead request journal.
 
 The data plane underneath is PAGED on Pallas runtimes: each document owns
 one slot row of a persistent per-bucket KV arena, the per-launch slot ids
@@ -52,7 +59,10 @@ from repro.data.tokenizer import HashWordTokenizer
 from repro.launch.serve import poisson_arrivals, warm_arena
 from repro.models.model import LM
 from repro.models.runtime import CPU_TEST
-from repro.serving.engine import CascadeEngine, LMBackend
+from repro.serving.engine import (CascadeEngine, CascadeServer, LMBackend,
+                                  RequestJournal)
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.scheduler import RESOLVED, RetryPolicy
 
 OPS = {
     "o_orig": "does this opinion overturn a lower court decision",
@@ -198,6 +208,57 @@ def main():
     print(f"   agreement with oracle: {agree:.1%}; "
           f"KV cache hit rate {stats.cache_hit_rate():.1%}; "
           f"launches {launches}")
+    print("6. failure model: injected faults, terminal states, warm restart")
+    # The serving plane guarantees every submitted document reaches a
+    # TERMINAL state (RESOLVED / FAILED / TIMED_OUT) under launch
+    # failures (failed launches re-enqueue members solo with backoff),
+    # non-finite confidences (quarantine: solo retry, then escalate to
+    # the final stage), sick backends (circuit breaker routes around
+    # them), and arena loss (slots released, documents re-prefill via
+    # the eviction path).  backoff_base=0.0 keeps the replay instant and
+    # the launch schedule a pure function of the chaos seed.
+    for be in backends.values():
+        be.reset()
+    chaos = CascadeServer(backends, OPS, n_classes=2, batch_size=4,
+                          retry=RetryPolicy(max_retries=2, backoff_base=0.0),
+                          journal=RequestJournal())
+    h_chaos = chaos.register(cascade)
+    inj = FaultInjector(FaultPlan(seed=5, launch_failure_p=0.25, nan_p=0.2,
+                                  arena_loss_at=3)).install(chaos)
+    feed = sorted(test_docs)[:8]
+    for k, d in enumerate(feed):
+        h_chaos.submit(d, test_docs[d], arrival=float(k))
+    # "crash" the server after a few steps: the write-ahead journal has
+    # every submission, so a FRESH server re-registers the same query and
+    # recovers — resolved docs restore verbatim (no re-execution, $ carried
+    # over), in-flight docs are resubmitted from their original arrivals.
+    for _ in range(4):
+        chaos.step()
+    crashed_journal = chaos.journal
+    print(f"   pre-crash: {len(crashed_journal.resolutions)} of {len(feed)} "
+          f"docs terminal after 4 steps under injected faults "
+          f"({inj.counts['launch_failures']} launch failures, "
+          f"{inj.counts['nan_confidences']} NaN confidences, "
+          f"{inj.counts['arena_losses']} arena losses)")
+    for be in backends.values():
+        be.reset()
+    warm = CascadeServer(backends, OPS, n_classes=2, batch_size=4,
+                         retry=RetryPolicy(max_retries=2, backoff_base=0.0),
+                         journal=RequestJournal())
+    warm.register(cascade)
+    FaultInjector(FaultPlan(seed=5, nan_p=0.2)).install(warm)
+    futures = warm.recover(crashed_journal)
+    warm.drain()
+    statuses = [f.status for f in futures.values()]
+    chaos_stats = warm.stats()
+    print(f"   recovered server: {len(futures)} docs -> "
+          f"{sum(s == RESOLVED for s in statuses)} RESOLVED, "
+          f"{sum(s != RESOLVED for s in statuses)} FAILED/TIMED_OUT; "
+          f"retries={chaos_stats.retries} "
+          f"quarantines={chaos_stats.quarantines} "
+          f"recovered_docs={chaos_stats.recovered_docs} "
+          f"(every submitted doc is terminal: "
+          f"{all(f.done for f in futures.values())})")
     print(f"done in {time.time() - t0:.0f}s")
 
 

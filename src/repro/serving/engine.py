@@ -101,6 +101,59 @@ per-query ``ServeStats`` with the same rates as the analytical cost
 model, so engine costs are directly comparable to ``run_cascade`` in
 tests; ``server.stats()`` aggregates across queries (launches counted
 once, however many queries shared them).
+
+Failure model (fault-tolerant serving plane)
+--------------------------------------------
+Every submitted document reaches exactly one terminal state —
+``RESOLVED``, ``FAILED``, or ``TIMED_OUT`` — surfaced on its
+``DocFuture`` (``.status`` / ``.error``); ``drain()`` never hangs on a
+fault.  The machinery, front to back:
+
+  launch failure   ``run_group`` raising (backends commit arena state
+                   only after a successful step, so a failed launch
+                   leaves no partial state) re-enqueues each member
+                   document SOLO with capped-exponential backoff
+                   (``RetryPolicy``) — launch-level isolation: one
+                   poisoned document in a packed cross-query launch
+                   cannot fail its cohort, because retries run in
+                   singleton groups.  Documents exceeding
+                   ``retry.max_retries`` resolve ``FAILED``.
+  deadline         ``submit(..., deadline_s=...)`` bounds a document's
+                   wall-clock; expired documents are popped from the
+                   queue each step and resolve ``TIMED_OUT`` (deadline
+                   beats backoff).
+  quarantine       a non-finite confidence (NaN/Inf logits upstream) is
+                   caught post-launch — the launch is already billed —
+                   and the document retries solo at the same stage; a
+                   second non-finite result escalates it straight to the
+                   final (oracle) stage as graceful degradation, and a
+                   non-finite FINAL stage resolves it ``FAILED``.
+  circuit breaker  ``breaker_threshold`` consecutive launch failures on
+                   one backend open it for ``breaker_cooldown`` launch
+                   attempts; queued stages that would run on the sick
+                   backend are rerouted to the NEXT cascade stage (and
+                   billed as that stage) until the breaker half-opens.
+                   The final stage is never skipped.
+  arena loss       a lost (backend, bucket) replays the existing
+                   eviction path — slots released, ``cached_len`` zeroed
+                   — so survivors re-prefill exactly like evicted
+                   documents (``recovered_docs`` counts them).
+  watchdog         ``stall_limit`` consecutive no-progress steps (zero
+                   launches, zero resolutions, nothing legitimately in
+                   backoff) raise ``ServerStalledError`` listing the
+                   stuck requests instead of spinning forever.
+  journal          a write-ahead ``RequestJournal`` (submit records
+                   written BEFORE the queue admit, resolutions after)
+                   enables ``CascadeServer.recover(journal)`` warm
+                   restart: resolved documents are restored verbatim
+                   (same preds/$, no recompute), unresolved ones are
+                   re-submitted with identical ids and accounting.
+
+``ServeStats`` carries the fault counters (retries, quarantines,
+timeouts, failures, breaker trips, recovered docs) and the per-launch
+billing ledger (``server.ledger()``) replays per-query $ exactly.  With
+no faults injected and no deadlines set, every addition above is inert:
+the fault-free path is bitwise identical to the pre-fault engine.
 """
 from __future__ import annotations
 
@@ -117,8 +170,98 @@ import numpy as np
 from ..core.tasks import Cascade
 from ..data.tokenizer import PAD, HashWordTokenizer, class_token
 from .arena import BucketArena
-from .scheduler import (DocRequest, LaunchSpec, RequestQueue, SchedulingPolicy,
+from .scheduler import (FAILED, RESOLVED, TIMED_OUT, DocRequest, LaunchSpec,
+                        RequestQueue, RetryPolicy, SchedulingPolicy,
                         ServeStats, SlotAllocator, StageConfig, fraction_len)
+
+
+class ServerStalledError(RuntimeError):
+    """``drain()``/``step()`` detected a live-locked server: ``stall_limit``
+    consecutive steps made no progress (no launch, no resolution) while
+    nothing was legitimately waiting out a retry backoff.  ``stuck`` lists
+    ``(query_id, ext_id, stage, retries, not_before)`` per wedged request.
+    """
+
+    def __init__(self, message: str,
+                 stuck: List[Tuple[int, int, int, int, float]]):
+        super().__init__(message)
+        self.stuck = stuck
+
+
+@dataclass
+class BackendHealth:
+    """Consecutive-failure circuit breaker state for one backend.
+
+    ``threshold`` straight launch failures open the breaker for
+    ``cooldown`` launch attempts (server-global attempt counter); while
+    open, the server reroutes the backend's queued stages to the next
+    cascade stage.  After the cooldown the breaker half-opens: the next
+    launch probes the backend, and a further failure re-trips it.
+    """
+
+    threshold: int = 3
+    cooldown: int = 8
+    consecutive_failures: int = 0
+    opened_at: Optional[int] = None     # attempt index the breaker opened
+    trips: int = 0
+
+    def record_failure(self, attempt_idx: int) -> bool:
+        """Note one launch failure; True when this failure TRIPS the
+        breaker (fresh trip or re-trip after an expired cooldown)."""
+        self.consecutive_failures += 1
+        if (self.consecutive_failures >= self.threshold
+                and not self.is_open(attempt_idx)):
+            self.opened_at = attempt_idx
+            self.trips += 1
+            return True
+        return False
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        self.opened_at = None
+
+    def is_open(self, attempt_idx: int) -> bool:
+        return (self.opened_at is not None
+                and attempt_idx < self.opened_at + self.cooldown)
+
+
+class RequestJournal:
+    """Write-ahead request journal enabling warm-restart recovery.
+
+    ``record_submit`` runs BEFORE the request enters the queue and
+    ``record_resolution`` after a terminal state is reached, so at any
+    crash point the journal names every admitted document and exactly
+    which ones are unresolved.  ``CascadeServer.recover(journal)`` on a
+    fresh server (same cascades registered in the same order) restores
+    resolved documents verbatim — original pred/conf/$, no recompute —
+    and re-submits unresolved ones with identical external ids,
+    arrivals, and deadline semantics.
+    """
+
+    def __init__(self) -> None:
+        self.registrations: List[int] = []          # qids in register order
+        self.submits: List[Dict[str, Any]] = []
+        self.resolutions: Dict[Tuple[int, int], Dict[str, Any]] = {}
+
+    def record_register(self, query_id: int) -> None:
+        self.registrations.append(query_id)
+
+    def record_submit(self, query_id: int, ext_id: int, text: str,
+                      arrival: Optional[float], stage: int,
+                      deadline_s: Optional[float]) -> None:
+        self.submits.append(dict(
+            query_id=query_id, ext_id=ext_id, text=text, arrival=arrival,
+            stage=stage, deadline_s=deadline_s))
+
+    def record_resolution(self, req: DocRequest) -> None:
+        self.resolutions[(req.query_id, req.ext_id)] = dict(
+            status=req.status, pred=req.pred, conf=req.conf,
+            exit_stage=req.exit_stage, cost=float(req.cost),
+            error=req.error)
+
+    def unresolved(self) -> List[Dict[str, Any]]:
+        return [s for s in self.submits
+                if (s["query_id"], s["ext_id"]) not in self.resolutions]
 
 
 def _pad_width(n: int) -> int:
@@ -591,13 +734,14 @@ class LMBackend:
 
 @dataclass
 class EngineResult:
-    pred: Dict[int, int]
+    pred: Dict[int, int]          # RESOLVED documents only
     conf: Dict[int, float]
     exit_stage: Dict[int, int]
     cost: float
     stats: ServeStats
     stage_cost: List[float] = field(default_factory=list)
-    doc_cost: Dict[int, float] = field(default_factory=dict)
+    doc_cost: Dict[int, float] = field(default_factory=dict)   # all terminal
+    status: Dict[int, str] = field(default_factory=dict)       # all terminal
 
 
 # stage-table entry: (model, op_id, fraction, threshold_vector-or-None)
@@ -613,6 +757,11 @@ class DocFuture:
     ``cost`` are populated.  ``result()`` steps the server until this
     document resolves (other queries' work is served along the way — the
     future never bypasses the scheduler).
+
+    ``done`` covers every TERMINAL state — ``status`` distinguishes
+    ``RESOLVED`` from ``FAILED``/``TIMED_OUT`` (``error`` carries the
+    diagnostic); ``pred``/``conf``/``exit_stage`` stay None for
+    non-resolved terminals and ``result()`` raises for them.
     """
 
     query_id: int
@@ -623,6 +772,16 @@ class DocFuture:
     @property
     def done(self) -> bool:
         return self._req.done
+
+    @property
+    def status(self) -> str:
+        """Lifecycle state: pending / resolved / failed / timed_out."""
+        return self._req.status
+
+    @property
+    def error(self) -> Optional[str]:
+        """Diagnostic for FAILED/TIMED_OUT terminals (None otherwise)."""
+        return self._req.error
 
     @property
     def pred(self) -> Optional[int]:
@@ -645,11 +804,20 @@ class DocFuture:
         return self._req.evictions
 
     def result(self) -> Tuple[int, float, int]:
-        """Block (stepping the server) until resolved: (pred, conf, stage)."""
+        """Block (stepping the server) until terminal: (pred, conf, stage).
+
+        Raises ``RuntimeError`` when the document terminates FAILED or
+        TIMED_OUT — a terminal state is always reached, never a hang.
+        """
         while not self._req.done:
             assert self._server.pending(), \
                 "server idle before this document resolved"
-            self._server.step()
+            if not self._server.step():
+                self._server._idle_wait()
+        if self._req.status != RESOLVED:
+            raise RuntimeError(
+                f"document {self.doc_id} (query {self.query_id}) "
+                f"{self._req.status}: {self._req.error}")
         return self._req.pred, self._req.conf, self._req.exit_stage
 
 
@@ -677,7 +845,8 @@ class QueryHandle:
 
     def submit(self, doc_id: int, text: str,
                arrival: Optional[float] = None, stage: int = 0,
-               arrival_ts: Optional[float] = None) -> DocFuture:
+               arrival_ts: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> DocFuture:
         """Admit a document into this query (streaming arrival).
 
         ``arrival`` is the scheduling priority — any comparable float
@@ -690,9 +859,16 @@ class QueryHandle:
         given.  ``stage`` lets pre-screened documents enter the cascade
         mid-way (clamped to the oracle).  Document ids are scoped to the
         query: two queries may both submit a document ``7``.
+
+        ``deadline_s`` bounds the document's wall-clock from submit: past
+        it the document resolves ``TIMED_OUT`` instead of launching
+        again (retry backoff does not extend the deadline).  Raises
+        ``ValueError`` for empty/whitespace-only text or a ``doc_id``
+        already submitted to this query.
         """
         return self._server._submit(self, doc_id, text, arrival=arrival,
-                                    stage=stage, arrival_ts=arrival_ts)
+                                    stage=stage, arrival_ts=arrival_ts,
+                                    deadline_s=deadline_s)
 
     def pending(self) -> int:
         """This query's documents admitted but not yet resolved."""
@@ -711,7 +887,8 @@ class QueryHandle:
         """Step the server until THIS query is idle (other queries' work
         is served along the way), then return its result."""
         while self.pending():
-            self._server.step()
+            if not self._server.step():
+                self._server._idle_wait()
         return self.result()
 
     @property
@@ -739,6 +916,13 @@ class CascadeServer:
     n_classes: int
     batch_size: int = 8
     policy: Optional[SchedulingPolicy] = None   # None = oldest_head_first
+    # ---- fault-tolerance knobs (see the module docstring's failure model)
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    breaker_threshold: int = 3       # consecutive failures to open a breaker
+    breaker_cooldown: int = 8        # launch attempts a breaker stays open
+    stall_limit: int = 256           # no-progress steps before stall error
+    journal: Optional[RequestJournal] = None    # write-ahead request journal
+    faults: Optional[Any] = None     # FaultInjector (set by install())
     _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
         default_factory=dict, repr=False)
     # ---- serving state (shared queue; per-query partitions keyed by qid)
@@ -758,6 +942,15 @@ class CascadeServer:
     _retired: int = field(default=0, repr=False)
     _seq: int = field(default=0, repr=False)
     _next_qid: int = field(default=0, repr=False)
+    # ---- fault-tolerance state
+    _health: Dict[str, BackendHealth] = field(default_factory=dict,
+                                              repr=False)
+    _ledger: List[Tuple[int, int, int, float]] = field(
+        default_factory=list, repr=False)   # (launch, qid, rid, cost)
+    _attempts: int = field(default=0, repr=False)   # launches tried (+failed)
+    _stalled_steps: int = field(default=0, repr=False)
+    _breaker_trips: int = field(default=0, repr=False)
+    _failed_launches: int = field(default=0, repr=False)
 
     def __post_init__(self) -> None:
         if not self._tok:
@@ -795,6 +988,14 @@ class CascadeServer:
         self._retired = 0
         self._seq = 0
         self._next_qid = 0
+        self._health.clear()
+        self._ledger.clear()
+        self._attempts = 0
+        self._stalled_steps = 0
+        self._breaker_trips = 0
+        self._failed_launches = 0
+        if self.journal is not None:    # dropped queries: journal restarts
+            self.journal = RequestJournal()
 
     def register(self, cascade: Cascade,
                  accuracy_target: Optional[float] = None,
@@ -819,6 +1020,8 @@ class CascadeServer:
         self._query_cost[qid] = 0.0
         self._fresh[qid] = []
         self._pending[qid] = 0
+        if self.journal is not None:
+            self.journal.record_register(qid)
         return handle
 
     def unregister(self, handle: QueryHandle) -> None:
@@ -847,23 +1050,35 @@ class CascadeServer:
 
     def _submit(self, handle: QueryHandle, doc_id: int, text: str,
                 arrival: Optional[float] = None, stage: int = 0,
-                arrival_ts: Optional[float] = None) -> DocFuture:
+                arrival_ts: Optional[float] = None,
+                deadline_s: Optional[float] = None) -> DocFuture:
         qid = handle.query_id
         assert self._handles.get(qid) is handle, \
             "handle is not registered with this server"
+        if not isinstance(text, str) or not text.strip():
+            raise ValueError(
+                f"doc {doc_id!r} (query {qid}): document text is empty or "
+                "whitespace-only")
         key = (qid, doc_id)
-        assert key not in self._ids, \
-            f"doc {doc_id} already submitted to query {qid}"
+        if key in self._ids:
+            raise ValueError(
+                f"doc {doc_id!r} already submitted to query {qid} "
+                "(doc ids must be unique within a query)")
         if arrival_ts is None:
             arrival_ts = time.perf_counter()
         if arrival is None:
             arrival = arrival_ts
+        if self.journal is not None:    # write-ahead: journal BEFORE admit
+            self.journal.record_submit(qid, doc_id, text, arrival, stage,
+                                       deadline_s)
         rid = self._seq                   # server-global request id == seq
         self._seq += 1
         req = DocRequest(
             doc_id=rid, query_id=qid, ext_id=doc_id,
             stage=min(max(int(stage), 0), len(handle.stages) - 1),
             arrival=arrival, seq=rid, arrival_ts=arrival_ts)
+        if deadline_s is not None:
+            req.deadline = arrival_ts + deadline_s
         enc: Dict[int, np.ndarray] = {}     # backends often share a tokenizer
         for m, be in self.backends.items():
             ids = enc.get(id(be.tokenizer))
@@ -956,21 +1171,40 @@ class CascadeServer:
 
         The launch may mix documents from several registered queries
         (same static signature).  Returns the ``(query_id, doc_id)``
-        pairs resolved by this step (may be empty).  No-op when idle.
+        pairs that reached a TERMINAL state this step (resolved, failed,
+        or timed out; may be empty).  No-op when idle.  A failed launch
+        never raises out of ``step``: its documents are re-enqueued solo
+        with backoff (or finished FAILED/TIMED_OUT past their retry/
+        deadline budgets) — see the module docstring's failure model.
         """
+        now = time.perf_counter()
+        terminal: List[Tuple[int, int]] = []
+        for req in self._queue.pop_expired(now):    # deadline beats backoff
+            self._finish(req, TIMED_OUT, now, error="deadline exceeded")
+            terminal.append((req.query_id, req.ext_id))
+        self._reroute_sick()
         launch = self._queue.next_launch(self._stage_of, self.batch_size,
-                                         policy=self.policy)
+                                         policy=self.policy, now=now)
         if launch is None:
-            return []
+            self._note_progress(bool(terminal))
+            return terminal
         be = self.backends[launch.model]
         launch = self._make_room(be, launch)
         ids = list(launch.doc_ids)
-        p, c, new_d, cached_d = be.run_group(
-            ids, self._tok[launch.model], launch.bucket, launch.f_len,
-            launch.fraction, launch.cached_len,
-            self._op_tokens(be, launch.op_id), self.n_classes)
+        self._attempts += 1
+        try:
+            p, c, new_d, cached_d = be.run_group(
+                ids, self._tok[launch.model], launch.bucket, launch.f_len,
+                launch.fraction, launch.cached_len,
+                self._op_tokens(be, launch.op_id), self.n_classes)
+        except Exception as exc:        # noqa: BLE001 — isolate the launch
+            self._on_launch_failure(launch, exc, now, terminal)
+            self._note_progress(True)
+            return terminal
+        health = self._health.get(launch.model)
+        if health is not None:
+            health.record_success()
         now = time.perf_counter()
-        resolved: List[Tuple[int, int]] = []
         touched: Dict[int, None] = {}           # queries in this launch
         for i, rid in enumerate(ids):
             req = self._requests[rid]
@@ -984,23 +1218,18 @@ class CascadeServer:
                          cost_d)
             self._query_cost[qid] += cost_d
             req.cost += cost_d
+            self._ledger.append((self._launches, qid, rid, float(cost_d)))
             req.cached[be.name] = be.cached_len(rid)
+            if not np.isfinite(c[i]):
+                self._quarantine(req, stats, now, terminal)
+                continue
             if thr is None or c[i] >= thr[p[i]]:
-                req.done = True
-                req.pred = int(p[i])
-                req.conf = float(c[i])
-                req.exit_stage = req.stage
-                for b in self.backends.values():
-                    if hasattr(b, "release"):
-                        b.release(rid)
-                for tok in self._tok.values():
-                    tok.pop(rid, None)
-                stats.latencies.append(max(now - req.arrival_ts, 0.0))
-                self._fresh[qid].append(rid)
-                self._pending[qid] -= 1
-                resolved.append((qid, req.ext_id))
+                self._finish(req, RESOLVED, now, pred=int(p[i]),
+                             conf=float(c[i]), exit_stage=req.stage)
+                terminal.append((qid, req.ext_id))
             else:
                 req.stage += 1
+                req.solo = False        # rejoin cohort launches
                 self._queue.push(req)
         self._launches += 1
         for qid in touched:       # a query's ``batches`` = launches it rode
@@ -1011,7 +1240,169 @@ class CascadeServer:
                       if hasattr(b, "note_launch"))
         if retired:
             self._note_retired(retired)
-        return resolved
+        if self.faults is not None:     # planned arena-loss events, if any
+            for bname, bucket in self.faults.poll_arena_loss(
+                    self._launches, self.backends):
+                self._apply_arena_loss(bname, bucket)
+        self._note_progress(True)
+        return terminal
+
+    # ------------------------------------------------------- fault handling
+    def _finish(self, req: DocRequest, status: str, now: float,
+                pred: Optional[int] = None, conf: Optional[float] = None,
+                exit_stage: Optional[int] = None,
+                error: Optional[str] = None) -> None:
+        """Move one request to a terminal state (the ONLY exit path):
+        bookkeeping, slot release, latency/fault counters, journal."""
+        qid = req.query_id
+        stats = self._query_stats[qid]
+        req.done = True
+        req.status = status
+        req.error = error
+        if status == RESOLVED:
+            req.pred = pred
+            req.conf = conf
+            req.exit_stage = exit_stage
+            stats.latencies.append(max(now - req.arrival_ts, 0.0))
+        elif status == TIMED_OUT:
+            stats.timeouts += 1
+        elif status == FAILED:
+            stats.failures += 1
+        for b in self.backends.values():
+            if hasattr(b, "release"):
+                b.release(req.doc_id)
+        for tok in self._tok.values():
+            tok.pop(req.doc_id, None)
+        self._fresh[qid].append(req.doc_id)
+        self._pending[qid] -= 1
+        if self.journal is not None:
+            self.journal.record_resolution(req)
+
+    def _on_launch_failure(self, launch: LaunchSpec, exc: Exception,
+                           now: float,
+                           terminal: List[Tuple[int, int]]) -> None:
+        """Launch-level isolation: the failed cohort's documents retry
+        INDIVIDUALLY (solo singleton groups) with capped-exponential
+        backoff; retry/deadline budgets exhausted -> FAILED/TIMED_OUT.
+        Backends commit arena state only after a successful step, so
+        there is no partial state to unwind.  Feeds the breaker."""
+        self._failed_launches += 1
+        health = self._health.get(launch.model)
+        if health is None:
+            health = BackendHealth(threshold=self.breaker_threshold,
+                                   cooldown=self.breaker_cooldown)
+            self._health[launch.model] = health
+        if health.record_failure(self._attempts):
+            self._breaker_trips += 1
+            # breakers guard a SHARED backend: mirror the trip into every
+            # query's stats (the aggregate counts it once)
+            for st in self._query_stats.values():
+                st.breaker_trips += 1
+        for rid in launch.doc_ids:
+            req = self._requests[rid]
+            stats = self._query_stats[req.query_id]
+            req.retries += 1
+            stats.retries += 1
+            if req.deadline is not None and req.deadline <= now:
+                self._finish(req, TIMED_OUT, now, error="deadline exceeded")
+                terminal.append((req.query_id, req.ext_id))
+            elif req.retries > self.retry.max_retries:
+                self._finish(
+                    req, FAILED, now,
+                    error=f"launch failed {req.retries}x (last: {exc})")
+                terminal.append((req.query_id, req.ext_id))
+            else:
+                req.solo = True
+                req.not_before = now + self.retry.backoff(req.retries)
+                self._queue.push(req)
+
+    def _quarantine(self, req: DocRequest, stats: ServeStats, now: float,
+                    terminal: List[Tuple[int, int]]) -> None:
+        """Non-finite confidence: the launch itself succeeded (and was
+        billed), but this document's output is garbage.  First offense
+        retries solo at the same stage; a repeat escalates straight to
+        the final stage (graceful degradation — the oracle re-reads the
+        document from scratch); non-finite at the FINAL stage fails."""
+        stats.quarantines += 1
+        req.quarantines += 1
+        final = len(self._handles[req.query_id].stages) - 1
+        if req.quarantines < 2:
+            req.solo = True             # isolate the retry
+            self._queue.push(req)
+        elif req.stage < final:
+            req.stage = final
+            req.solo = True
+            self._queue.push(req)
+        else:
+            self._finish(req, FAILED, now,
+                         error="non-finite confidence at final stage")
+            terminal.append((req.query_id, req.ext_id))
+
+    def _reroute_sick(self) -> None:
+        """Advance queued stages past backends whose breaker is open: the
+        document runs its NEXT cascade stage instead (billed as that
+        stage).  The final stage is never skipped — documents whose only
+        remaining stage is sick wait out the cooldown (or their retry/
+        deadline budget)."""
+        if not self._health:
+            return
+        for req in self._queue.ready():
+            handle = self._handles[req.query_id]
+            final = len(handle.stages) - 1
+            while req.stage < final:
+                h = self._health.get(handle.stages[req.stage][0])
+                if h is None or not h.is_open(self._attempts):
+                    break
+                req.stage += 1
+
+    def _apply_arena_loss(self, bname: str, bucket: int) -> None:
+        """Replay the eviction path for every live document of a lost
+        (backend, bucket): slot released, cached prefix zeroed — the
+        next launch re-prefills over a recycled slot, exactly like a
+        budget eviction.  In-flight results already billed are kept."""
+        be = self.backends[bname]
+        for d in list(be.live_docs()):
+            if be._doc_slot[d][0] != bucket:
+                continue
+            be.release(d)
+            req = self._requests.get(d)
+            if req is not None and not req.done:
+                req.cached[bname] = 0
+                self._query_stats[req.query_id].recovered_docs += 1
+
+    def _note_progress(self, progressed: bool) -> None:
+        """Liveness watchdog: ``stall_limit`` consecutive no-progress
+        steps with nothing legitimately waiting out a finite backoff
+        raise ``ServerStalledError`` instead of spinning forever."""
+        if progressed:
+            self._stalled_steps = 0
+            return
+        wait = self._queue.next_eligible_in()
+        if wait is None or (wait > 0 and math.isfinite(wait)):
+            self._stalled_steps = 0     # idle, or a legitimate backoff wait
+            return
+        self._stalled_steps += 1
+        if self._stalled_steps >= self.stall_limit:
+            stuck = [(r.query_id, r.ext_id, r.stage, r.retries,
+                      r.not_before) for r in self._queue.ready()]
+            raise ServerStalledError(
+                f"no progress in {self._stalled_steps} consecutive steps; "
+                f"stuck requests (qid, doc, stage, retries, not_before): "
+                f"{stuck}", stuck)
+
+    def _idle_wait(self) -> None:
+        """Sleep out the shortest pending retry backoff (bounded) so
+        drain loops do not busy-spin while every request is backing off."""
+        wait = self._queue.next_eligible_in()
+        if wait is not None and wait > 0 and math.isfinite(wait):
+            time.sleep(min(wait, 0.05))
+
+    def ledger(self) -> List[Tuple[int, int, int, float]]:
+        """Per-document billing ledger: ``(launch, query_id, request_id,
+        cost)`` in billing order — replaying the entries per query with
+        ``+=`` reproduces ``cost(qid)`` EXACTLY (same float additions in
+        the same order).  Restored journal entries use launch == -1."""
+        return list(self._ledger)
 
     # --------------------------------------------------------------- results
     def _poll_query(self, query_id: int) -> Dict[int, Tuple[int, float, int]]:
@@ -1052,17 +1443,24 @@ class CascadeServer:
             self._merge_stats(agg, st)
         agg.batches = self._launches
         agg.retired_buckets = self._retired
+        agg.breaker_trips = self._breaker_trips   # shared, counted once
         return agg
 
     @staticmethod
     def _merge_stats(dst: ServeStats, src: ServeStats) -> None:
-        """Fold one query's stage vectors/evictions/latencies into
-        ``dst`` (launch counters are NOT summed — launches are shared)."""
+        """Fold one query's stage vectors/evictions/latencies/fault
+        counters into ``dst`` (launch and breaker counters are NOT
+        summed — launches and backends are shared)."""
         for s in range(len(src.stage_docs)):
             dst.record(s, src.stage_docs[s], src.stage_new_tokens[s],
                        src.stage_cached_tokens[s], src.stage_cost[s])
         dst.evictions += src.evictions
         dst.latencies.extend(src.latencies)
+        dst.retries += src.retries
+        dst.quarantines += src.quarantines
+        dst.timeouts += src.timeouts
+        dst.failures += src.failures
+        dst.recovered_docs += src.recovered_docs
 
     def occupancy(self) -> float:
         """Mean documents per launch across every query the server has
@@ -1074,24 +1472,103 @@ class CascadeServer:
         return docs / self._launches if self._launches else 0.0
 
     def result(self, query_id: int) -> EngineResult:
-        """One query's resolved documents (keyed by the caller's doc ids),
-        with per-query cost/stats and deterministic per-document $."""
+        """One query's terminal documents (keyed by the caller's doc ids),
+        with per-query cost/stats and deterministic per-document $.
+
+        ``pred``/``conf``/``exit_stage`` cover RESOLVED documents;
+        ``status``/``doc_cost`` cover every terminal state (FAILED and
+        TIMED_OUT documents have billed partial work too)."""
         done = [r for r in self._requests.values()
                 if r.done and r.query_id == query_id]
+        ok = [r for r in done if r.status == RESOLVED]
         stats = self._query_stats[query_id]
         return EngineResult(
-            pred={r.ext_id: r.pred for r in done},
-            conf={r.ext_id: r.conf for r in done},
-            exit_stage={r.ext_id: r.exit_stage for r in done},
+            pred={r.ext_id: r.pred for r in ok},
+            conf={r.ext_id: r.conf for r in ok},
+            exit_stage={r.ext_id: r.exit_stage for r in ok},
             cost=self._query_cost[query_id], stats=stats,
             stage_cost=list(stats.stage_cost),
-            doc_cost={r.ext_id: r.cost for r in done})
+            doc_cost={r.ext_id: r.cost for r in done},
+            status={r.ext_id: r.status for r in done})
 
     def drain(self) -> Dict[int, EngineResult]:
-        """Step until the shared queue is idle; per-query results."""
+        """Step until the shared queue is idle; per-query results.
+
+        Terminal-state guarantee: every admitted document leaves the
+        queue as RESOLVED, FAILED, or TIMED_OUT (the watchdog raises
+        ``ServerStalledError`` rather than spinning), so ``drain``
+        always returns."""
         while self.pending():
-            self.step()
+            if not self.step():
+                self._idle_wait()
         return {qid: self.result(qid) for qid in self._handles}
+
+    # -------------------------------------------------------- warm restart
+    def recover(self, journal: RequestJournal
+                ) -> Dict[Tuple[int, int], DocFuture]:
+        """Warm-restart from a prior server's write-ahead journal.
+
+        Call on a FRESH server after re-registering the same cascades in
+        the same order (journal registration order maps onto this
+        server's registration order).  Documents the journal shows
+        resolved are restored verbatim — original pred/conf/status/$,
+        no recompute, ``cost(qid)`` re-accumulated in journal order so
+        accounting matches exactly.  Unresolved documents are
+        re-submitted with identical external ids, arrivals, and deadline
+        budgets (``recovered_docs`` counts them); step/drain as usual to
+        finish them.  Returns ``(query_id, ext_id) -> DocFuture`` for
+        every journaled document.
+        """
+        if len(journal.registrations) != len(self._handles):
+            raise ValueError(
+                f"journal has {len(journal.registrations)} registered "
+                f"queries, this server has {len(self._handles)}; register "
+                "the same cascades (in order) before recover()")
+        qid_map = dict(zip(journal.registrations, sorted(self._handles)))
+        futures: Dict[Tuple[int, int], DocFuture] = {}
+        for sub in journal.submits:
+            handle = self._handles[qid_map[sub["query_id"]]]
+            res = journal.resolutions.get((sub["query_id"], sub["ext_id"]))
+            if res is None:
+                fut = handle.submit(
+                    sub["ext_id"], sub["text"], arrival=sub["arrival"],
+                    stage=sub["stage"], deadline_s=sub["deadline_s"])
+                self._query_stats[handle.query_id].recovered_docs += 1
+            else:
+                fut = self._restore(handle, sub, res)
+            futures[(handle.query_id, sub["ext_id"])] = fut
+        return futures
+
+    def _restore(self, handle: QueryHandle, sub: Dict[str, Any],
+                 res: Dict[str, Any]) -> DocFuture:
+        """Re-materialize one already-terminal journaled document:
+        request record, result fields, $-accounting (ledger entry with
+        launch == -1), and this server's own journal — no model work."""
+        qid = handle.query_id
+        rid = self._seq
+        self._seq += 1
+        req = DocRequest(
+            doc_id=rid, query_id=qid, ext_id=sub["ext_id"], stage=0,
+            arrival=sub["arrival"], seq=rid, arrival_ts=time.perf_counter())
+        req.done = True
+        req.status = res["status"]
+        req.pred = res["pred"]
+        req.conf = res["conf"]
+        req.exit_stage = res["exit_stage"]
+        req.cost = res["cost"]
+        req.error = res["error"]
+        self._requests[rid] = req
+        self._ids[(qid, sub["ext_id"])] = rid
+        self._query_cost[qid] += res["cost"]
+        self._ledger.append((-1, qid, rid, res["cost"]))
+        self._fresh[qid].append(rid)
+        if self.journal is not None:
+            self.journal.record_submit(
+                qid, sub["ext_id"], sub["text"], sub["arrival"],
+                sub["stage"], sub["deadline_s"])
+            self.journal.record_resolution(req)
+        return DocFuture(query_id=qid, doc_id=sub["ext_id"], _req=req,
+                         _server=self)
 
 
 @dataclass
@@ -1128,11 +1605,13 @@ class CascadeEngine(CascadeServer):
 
     def submit(self, doc_id: int, text: str,
                arrival: Optional[float] = None, stage: int = 0,
-               arrival_ts: Optional[float] = None) -> DocFuture:
+               arrival_ts: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> DocFuture:
         """Admit a document into the session (see ``QueryHandle.submit``)."""
         assert self._handle is not None, "call start(cascade) before submit()"
         return self._handle.submit(doc_id, text, arrival=arrival,
-                                   stage=stage, arrival_ts=arrival_ts)
+                                   stage=stage, arrival_ts=arrival_ts,
+                                   deadline_s=deadline_s)
 
     def step(self) -> List[int]:
         """Dispatch one launch; returns the doc ids resolved by it."""
@@ -1151,7 +1630,8 @@ class CascadeEngine(CascadeServer):
     def drain(self) -> EngineResult:
         """Step until the queue is idle; result covers the whole session."""
         while self.pending():
-            CascadeServer.step(self)
+            if not CascadeServer.step(self):
+                self._idle_wait()
         return self.result()
 
     # -------------------------------------------------------- batch wrapper

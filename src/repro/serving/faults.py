@@ -1,0 +1,191 @@
+"""Deterministic fault injection for the cascade serving plane.
+
+This module is the chaos half of the fault-tolerance contract: it wraps a
+server's ``LMBackend``s in proxies that inject the failure classes the
+engine must survive, from a single seeded RNG so every chaos run is
+exactly reproducible.
+
+Injected fault classes
+----------------------
+launch failure   ``run_group`` raises ``InjectedLaunchFailure`` before the
+                 model step executes.  Backends allocate slots before the
+                 jitted step and only commit arena state afterwards, so a
+                 failed launch leaves no partial state; the engine
+                 re-enqueues each member document solo with backoff.
+non-finite conf  one document's confidence entry in the returned batch is
+                 overwritten with NaN *after* a successful step — the
+                 billing already happened, mirroring a real model emitting
+                 garbage logits.  The engine quarantines that document.
+latency spike    ``run_group`` sleeps ``spike_s`` before stepping,
+                 exercising deadline/timeout paths without touching
+                 results.
+arena loss       at a planned launch index the injector reports the
+                 (backend, bucket) holding the most live documents as
+                 lost; the engine replays the eviction path (release slot,
+                 zero cached length) so the next launch re-prefills.
+
+Determinism: the injector draws a FIXED number of uniforms per
+``run_group`` call (one per probabilistic fault class, drawn whether or
+not the fault fires) plus one per NaN event to pick the victim row, so
+the fault schedule depends only on ``FaultPlan.seed`` and the sequence of
+launches — not on which faults happened to fire earlier.
+
+Usage::
+
+    injector = FaultInjector(FaultPlan(seed=7, launch_failure_p=0.2))
+    injector.install(server)        # wraps server.backends in place
+    ... submit / drain as usual ...
+    injector.counts                 # {"launch_failures": ..., ...}
+
+The wrappers forward every attribute to the wrapped backend, so the
+engine's slot/eviction/billing paths run unmodified; with all
+probabilities zero and no arena-loss event the wrapped server is
+behaviourally identical to the bare one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import time
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Base class for faults raised by the injection harness."""
+
+
+class InjectedLaunchFailure(InjectedFault):
+    """A launch that failed before its model step committed any state."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded description of which faults to inject and how often.
+
+    Probabilities are per ``run_group`` call.  ``arena_loss_at`` names the
+    1-based launch index *after* which the arena-loss event fires (None
+    disables it); ``arena_loss_backend`` pins the victim backend by name
+    (None picks the backend+bucket with the most live documents).
+    """
+
+    seed: int = 0
+    launch_failure_p: float = 0.0
+    nan_p: float = 0.0
+    latency_spike_p: float = 0.0
+    spike_s: float = 0.0
+    arena_loss_at: Optional[int] = None
+    arena_loss_backend: Optional[str] = None
+
+
+class FaultInjector:
+    """Draws the fault schedule and wraps backends with injecting proxies."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = np.random.default_rng(plan.seed)
+        self.calls = 0
+        self.counts: Dict[str, int] = {
+            "launch_failures": 0,
+            "nan_confidences": 0,
+            "latency_spikes": 0,
+            "arena_losses": 0,
+        }
+        self._arena_loss_armed = plan.arena_loss_at is not None
+
+    # -- per-call schedule -------------------------------------------------
+    def draw(self) -> Tuple[bool, bool, bool]:
+        """(fail_launch, corrupt_conf, spike) for the next run_group call.
+
+        Always burns exactly three uniforms so the schedule is a pure
+        function of the seed and the call index.
+        """
+        u_fail, u_nan, u_spike = self.rng.uniform(size=3)
+        self.calls += 1
+        return (u_fail < self.plan.launch_failure_p,
+                u_nan < self.plan.nan_p,
+                u_spike < self.plan.latency_spike_p)
+
+    def pick_victim(self, n: int) -> int:
+        """Row index whose confidence gets corrupted (extra draw)."""
+        return int(self.rng.integers(n))
+
+    # -- arena loss --------------------------------------------------------
+    def poll_arena_loss(self, launch_idx: int, backends: Dict[str, Any]
+                        ) -> List[Tuple[str, int]]:
+        """(backend name, bucket) pairs lost after launch ``launch_idx``.
+
+        Fires at most once, at ``plan.arena_loss_at``; the victim is the
+        (backend, bucket) with the most live slots — losing an idle arena
+        would test nothing.
+        """
+        if not self._arena_loss_armed or launch_idx < self.plan.arena_loss_at:
+            return []
+        self._arena_loss_armed = False
+        best: Optional[Tuple[str, int]] = None
+        best_live = 0
+        for name, be in backends.items():
+            inner = getattr(be, "_inner", be)
+            if (self.plan.arena_loss_backend is not None
+                    and name != self.plan.arena_loss_backend):
+                continue
+            live_by_bucket: Dict[int, int] = {}
+            for bucket, _slot in inner._doc_slot.values():
+                live_by_bucket[bucket] = live_by_bucket.get(bucket, 0) + 1
+            for bucket, live in live_by_bucket.items():
+                if live > best_live:
+                    best, best_live = (name, bucket), live
+        if best is None:
+            return []
+        self.counts["arena_losses"] += 1
+        return [best]
+
+    # -- installation ------------------------------------------------------
+    def wrap(self, backend: Any) -> "FaultyBackend":
+        return FaultyBackend(backend, self)
+
+    def install(self, server: Any) -> "FaultInjector":
+        """Wrap every backend of ``server`` in place and register self."""
+        server.backends = {name: self.wrap(be)
+                           for name, be in server.backends.items()}
+        server.faults = self
+        return self
+
+
+class FaultyBackend:
+    """Transparent ``LMBackend`` proxy that injects planned faults.
+
+    Everything except ``run_group`` forwards to the wrapped backend, so
+    slot allocation, eviction, retirement and byte accounting behave
+    exactly as without injection.
+    """
+
+    def __init__(self, inner: Any, injector: FaultInjector):
+        object.__setattr__(self, "_inner", inner)
+        object.__setattr__(self, "_injector", injector)
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(object.__getattribute__(self, "_inner"), name)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        setattr(object.__getattribute__(self, "_inner"), name, value)
+
+    def run_group(self, *args, **kwargs):
+        inj: FaultInjector = object.__getattribute__(self, "_injector")
+        inner = object.__getattribute__(self, "_inner")
+        fail, corrupt, spike = inj.draw()
+        if spike and inj.plan.spike_s > 0.0:
+            inj.counts["latency_spikes"] += 1
+            time.sleep(inj.plan.spike_s)
+        if fail:
+            inj.counts["launch_failures"] += 1
+            raise InjectedLaunchFailure(
+                f"injected launch failure (call {inj.calls}, "
+                f"model={inner.name})")
+        pred, conf, new_d, cached_d = inner.run_group(*args, **kwargs)
+        if corrupt:
+            inj.counts["nan_confidences"] += 1
+            conf = np.array(conf, dtype=np.float64, copy=True)
+            conf[inj.pick_victim(conf.shape[0])] = np.nan
+        return pred, conf, new_d, cached_d

@@ -34,6 +34,30 @@ Continuous batching rides on two pieces here:
     while ``largest_ready_group`` trades per-document latency for batch
     occupancy under overload.
 
+Failure model (fault-tolerant serving plane)
+--------------------------------------------
+A request is no longer guaranteed to resolve: it reaches exactly one of
+three TERMINAL states — ``RESOLVED`` (a stage cleared its threshold or
+the oracle fall-through ran), ``FAILED`` (a launch kept failing past
+``RetryPolicy.max_retries``, or confidences stayed non-finite at the
+final stage), or ``TIMED_OUT`` (its deadline elapsed before
+resolution).  The scheduler's half of that contract:
+
+  * ``RetryPolicy`` — capped exponential backoff for failed launches;
+    a retried request carries ``not_before`` (the earliest wall-clock
+    instant it may launch again) and ``next_launch(now=...)`` treats
+    requests still in backoff as invisible;
+  * launch-level isolation — a request re-enqueued after a failure or a
+    non-finite-confidence quarantine is marked ``solo`` and forms a
+    SINGLETON launch group, so one poisoned document in a packed
+    cross-query launch can never fail its (healthy) cohort twice;
+  * per-request ``deadline`` (absolute ``time.perf_counter`` instant) —
+    ``pop_expired(now)`` sweeps expired requests out of the ready set
+    before packing, and the server resolves them ``TIMED_OUT``;
+  * ``next_eligible_in(now)`` — how long until the earliest backoff
+    expires, so ``drain()`` can sleep instead of spinning (and the
+    engine's no-progress watchdog can tell backoff from a true stall).
+
 ``pack_stage_batches`` (the PR-1 stage-synchronous packer) is retained for
 per-stage scoring paths; it emits ``StageBatch`` launches grouped by
 ``(bucket, cached_len)`` within one stage.  Documents whose cached prefix
@@ -47,6 +71,7 @@ A straggler policy can migrate queued work between serving shards
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
@@ -54,6 +79,40 @@ from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
 import numpy as np
 
 DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+# Request lifecycle states.  PENDING is the only non-terminal state; every
+# submitted document must end in exactly one of the other three (the chaos
+# benchmark's all-docs-terminal invariant).
+PENDING = "pending"
+RESOLVED = "resolved"
+FAILED = "failed"
+TIMED_OUT = "timed_out"
+TERMINAL_STATES = (RESOLVED, FAILED, TIMED_OUT)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry budget + capped exponential backoff for failed launches.
+
+    A launch failure (raised exception — injected or real) re-enqueues
+    each member document individually; the document's ``retries`` counter
+    increments and its next launch is delayed by ``backoff(retries)``
+    seconds: ``backoff_base * 2**(retries - 1)`` capped at
+    ``backoff_cap``.  A document whose ``retries`` exceeds
+    ``max_retries`` resolves terminally as ``FAILED`` instead of
+    retrying forever.  ``backoff_base = 0`` disables the delay (retries
+    become immediately eligible) — deterministic chaos tests use that.
+    """
+
+    max_retries: int = 3
+    backoff_base: float = 0.05
+    backoff_cap: float = 1.0
+
+    def backoff(self, retries: int) -> float:
+        if self.backoff_base <= 0.0:
+            return 0.0
+        return min(self.backoff_base * (2.0 ** max(retries - 1, 0)),
+                   self.backoff_cap)
 
 
 def bucket_len(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
@@ -109,6 +168,16 @@ class DocRequest:
     enters the queue at its current stage and re-prefills as new tokens.
     ``cost`` accumulates this document's own $ across its launches
     (deterministic per-doc accounting regardless of launch composition).
+
+    Fault-tolerance state: ``status`` moves PENDING -> exactly one of
+    ``RESOLVED``/``FAILED``/``TIMED_OUT`` (``done`` mirrors terminality);
+    ``retries``/``quarantines`` count failed launches and non-finite
+    confidence events; ``not_before`` is the backoff gate (the request is
+    invisible to ``next_launch`` until then); ``deadline`` is an absolute
+    ``perf_counter`` instant after which the request times out; ``solo``
+    marks a retried/quarantined request that must launch alone
+    (launch-level isolation); ``error`` carries the last failure message
+    for terminal diagnostics.
     """
 
     doc_id: int
@@ -126,6 +195,14 @@ class DocRequest:
     exit_stage: Optional[int] = None
     evictions: int = 0
     done: bool = False
+    # --- fault-tolerance lifecycle
+    status: str = PENDING
+    retries: int = 0                  # failed launches survived
+    quarantines: int = 0              # non-finite confidence events
+    not_before: float = 0.0           # backoff gate (perf_counter instant)
+    deadline: Optional[float] = None  # absolute timeout (perf_counter)
+    solo: bool = False                # launch alone (failure isolation)
+    error: Optional[str] = None       # last failure diagnostic
 
     def __post_init__(self) -> None:
         if self.ext_id is None:
@@ -154,8 +231,11 @@ class LaunchSpec:
 
 # (model, op_id, fraction) of a request's current stage
 StageConfig = Tuple[str, str, float]
-# static launch signature: (model, op_id, fraction, bucket, cached, f_len)
-SignatureKey = Tuple[str, str, float, int, int, int]
+# static launch signature: (model, op_id, fraction, bucket, cached, f_len,
+# isolation key).  The last element is -1 for normal requests; a ``solo``
+# request contributes its own doc_id, so it always forms a singleton group
+# (launch-level failure isolation).
+SignatureKey = Tuple[str, str, float, int, int, int, int]
 # scheduling policy: pick which ready group dispatches next
 SchedulingPolicy = Callable[
     [Mapping[SignatureKey, List[DocRequest]],
@@ -213,14 +293,46 @@ class RequestQueue:
     def clear(self) -> None:
         self._ready.clear()
 
+    def ready(self) -> List[DocRequest]:
+        """Snapshot of every queued request (backoff included)."""
+        return list(self._ready.values())
+
+    def pop_expired(self, now: float) -> List[DocRequest]:
+        """Remove and return requests whose deadline has elapsed.
+
+        Deadline beats backoff: a request sitting out a retry delay still
+        times out on schedule.  The caller resolves the returned requests
+        as ``TIMED_OUT``.
+        """
+        out = [r for r in self._ready.values()
+               if r.deadline is not None and r.deadline <= now]
+        for r in out:
+            del self._ready[r.doc_id]
+        return out
+
+    def next_eligible_in(self, now: Optional[float] = None
+                         ) -> Optional[float]:
+        """Seconds until the earliest queued request leaves backoff.
+
+        ``<= 0`` means work is dispatchable right now; ``None`` means the
+        queue is empty; ``inf`` means every queued request is gated
+        forever (a stall, not a wait — the engine watchdog treats it so).
+        """
+        if not self._ready:
+            return None
+        if now is None:
+            now = time.perf_counter()
+        return min(r.not_before for r in self._ready.values()) - now
+
     def next_launch(
         self,
         stage_config: Callable[[DocRequest], StageConfig],
         batch_size: int,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         policy: Optional[SchedulingPolicy] = None,
+        now: Optional[float] = None,
     ) -> Optional[LaunchSpec]:
-        """Pop the next launch, or None when the queue is empty.
+        """Pop the next launch, or None when nothing is dispatchable.
 
         ``stage_config(req) -> (model, op_id, fraction)`` resolves a
         request's CURRENT stage through its owning query (the oracle
@@ -229,24 +341,36 @@ class RequestQueue:
         share a static signature land in the same group.  ``policy``
         picks which ready group dispatches (None = ``oldest_head_first``;
         ``largest_ready_group`` favours occupancy under overload).
+
+        Requests still in retry backoff (``not_before > now``) are
+        invisible this call; ``solo`` requests form singleton groups so a
+        poisoned document retries alone (see the module docstring's
+        failure model).  ``now`` defaults to ``time.perf_counter()``.
         """
         if not self._ready:
             return None
+        if now is None:
+            now = time.perf_counter()
         # one O(N) pass: bin by signature, tracking each group's head so
         # only the SELECTED group is sorted (not every group every step)
         groups: Dict[SignatureKey, List[DocRequest]] = {}
         heads: Dict[SignatureKey, Tuple[float, int]] = {}
         for req in self._ready.values():
+            if req.not_before > now:          # still backing off
+                continue
             model, op_id, fraction = stage_config(req)
             blen = bucket_len(req.tok_len[model], buckets)
             f_len = fraction_len(blen, fraction)
             eff_c = min(req.cached.get(model, 0), f_len)
-            key = (model, op_id, fraction, blen, eff_c, f_len)
+            key = (model, op_id, fraction, blen, eff_c, f_len,
+                   req.doc_id if req.solo else -1)
             groups.setdefault(key, []).append(req)
             if key not in heads or req.key() < heads[key]:
                 heads[key] = req.key()
+        if not groups:
+            return None
         best_key = (policy or oldest_head_first)(groups, heads)
-        model, op_id, fraction, blen, eff_c, f_len = best_key
+        model, op_id, fraction, blen, eff_c, f_len = best_key[:6]
         take = sorted(groups[best_key], key=DocRequest.key)[:batch_size]
         for req in take:
             del self._ready[req.doc_id]
@@ -387,6 +511,13 @@ class ServeStats:
     evictions: int = 0                 # slots preempted under budget pressure
     retired_buckets: int = 0           # idle arenas freed (memory control)
     latencies: List[float] = field(default_factory=list)   # submit->resolve s
+    # fault-tolerance counters (see the module docstring's failure model)
+    retries: int = 0                   # doc re-enqueues after failed launches
+    quarantines: int = 0               # non-finite confidences caught
+    timeouts: int = 0                  # docs resolved TIMED_OUT
+    failures: int = 0                  # docs resolved FAILED
+    breaker_trips: int = 0             # backend circuit-breaker openings
+    recovered_docs: int = 0            # arena-loss replays + journal resubmits
 
     def latency_quantile(self, q: float) -> float:
         if not self.latencies:
