@@ -12,7 +12,10 @@ relative.  Timing metrics (docs/s, latency) are intentionally NOT gated.
 The chaos (fault-injection) section is gated on its boolean invariants
 only — all docs terminal, exact accounting, journal recovery — since its
 counters vary with ``--chaos-seed``; the fault-free metrics above must
-stay byte-identical whether or not injection ran.
+stay byte-identical whether or not injection ran.  The capacity section
+(prefix sharing + bf16 arenas) pins its own per-arm dtypes, so its gates
+hold on the ``--kv-dtype=bf16`` smoke leg too — the one committed
+baseline serves both legs.
 
     python benchmarks/serve_engine.py --smoke          # writes BENCH_smoke.json
     python benchmarks/check_regression.py BENCH_smoke.json \
@@ -50,6 +53,27 @@ TOLERANCES = {
     "paged.gather_copy_bytes_per_launch":     ("exact", 0),
     "paged.paged_arena_copy_bytes_per_launch": ("exact", 0),
     "paged.paged_undo_log_bytes_per_launch":  ("exact", 0),
+    # default doc-before-op plane: prefix-sharing counters structurally 0
+    # (the capacity section exercises the nonzero paths)
+    "static.prefix_hits":                     ("exact", 0),
+    "static.cow_copies":                      ("exact", 0),
+    "static.re_prefill_tokens":               ("exact", 0),
+    # capacity: prefix sharing + bf16 arenas under a fixed byte budget.
+    # The arms pin their own dtypes/planes, so every number here is
+    # byte-identical whatever --kv-dtype the smoke leg ran under.
+    # (static.arena_bytes_peak is intentionally NOT gated: it halves on
+    # the bf16 leg; the per-arm peaks below pin the byte accounting.)
+    "capacity.byte_budget":                   ("exact", 0),
+    "capacity.no_pressure.f32_private.arena_bytes_peak": ("exact", 0),
+    "capacity.no_pressure.f32_prefix.arena_bytes_peak": ("exact", 0),
+    "capacity.no_pressure.bf16_prefix.arena_bytes_peak": ("exact", 0),
+    "capacity.no_pressure.f32_prefix.prefix_hits": ("exact", 0),
+    "capacity.no_pressure.f32_prefix.cow_copies": ("exact", 0),
+    "capacity.no_pressure.f32_prefix.cost":   ("rel", 1e-6),
+    "capacity.overload.f32_private.evictions": ("exact", 0),
+    "capacity.overload.f32_private.re_prefill_tokens": ("exact", 0),
+    "capacity.overload.bf16_prefix.evictions": ("exact", 0),
+    "capacity.overload.bf16_prefix.re_prefill_tokens": ("exact", 0),
 }
 
 # invariants the FRESH summary must satisfy regardless of the baseline
@@ -59,6 +83,16 @@ REQUIRED_TRUE = (
     "paged.parity.pred_match",
     "paged.parity.conf_bitwise",
     "paged.parity.doc_cost_parity_exact",
+    # capacity (prefix sharing + bf16 KV compression): the op-token memo
+    # and the compressed arena must leave the $-ledger exactly unchanged
+    # (same-op ladder), bf16 preds/confs must sit within the gated
+    # tolerance of f32, and under the fixed byte budget the bf16 arm must
+    # resolve the same overload with strictly fewer evictions and >= 1.8x
+    # fewer re-prefilled tokens than the f32 private baseline
+    "capacity.parity.doc_cost_parity_exact",
+    "capacity.parity.bf16_within_tolerance",
+    "capacity.overload.fewer_evictions_bf16",
+    "capacity.overload.reprefill_reduction_ge_1_8",
     # chaos (fault injection): every submitted document reaches a terminal
     # state, per-query/per-document $ replay the billing ledger exactly,
     # and a mid-flight crash warm-restarts from the write-ahead journal

@@ -117,18 +117,28 @@ def _model(seed: int):
     return m, m.init(jax.random.PRNGKey(seed))
 
 
-def make_backends(kind: str, tokz, models):
+# Extra LMBackend kwargs applied to EVERY arena backend the benchmark
+# builds (set from ``--kv-dtype``); explicit per-call kwargs win, so the
+# capacity section's fixed arms are immune to the CLI flag.
+_ARENA_KW: dict = {}
+
+
+def make_backends(kind: str, tokz, models, **kw):
     cls = {"seed": DictCacheLMBackend, "arena": LMBackend}[kind]
     rates = {"proxy": 0.06, "oracle": 1.0}
+    if kind == "arena":
+        kw = {**_ARENA_KW, **kw}
+    else:
+        kw = {}            # the seed engine has no arena to compress
     return {
         name: cls(name=name, model=m, params=p, tokenizer=tokz,
-                  rate_per_token=rates[name], s_alloc=512)
+                  rate_per_token=rates[name], s_alloc=512, **kw)
         for name, (m, p) in models.items()
     }
 
 
-def make_engine(kind: str, tokz, models, batch_size: int):
-    backends = make_backends(kind, tokz, models)
+def make_engine(kind: str, tokz, models, batch_size: int, **kw):
+    backends = make_backends(kind, tokz, models, **kw)
     cls = {"seed": SeedCascadeEngine, "arena": CascadeEngine}[kind]
     return cls(backends, OPS, n_classes=2, batch_size=batch_size), backends
 
@@ -629,6 +639,173 @@ def run_chaos_section(chaos_seed: int, models, tokz):
 
 
 # ---------------------------------------------------------------------------
+# Capacity section (PR 7): prefix-sharing + bf16 KV arenas under overload
+# ---------------------------------------------------------------------------
+
+# Three arms, all explicit (immune to --kv-dtype): the PR-1 doc-before-op
+# plane, the op-first prefix-sharing plane, and prefix sharing over a
+# bf16-compressed arena.  kv_dtype=None keeps the model compute dtype.
+CAP_ARMS = {
+    "f32_private": dict(prefix_sharing=False, kv_dtype=None),
+    "f32_prefix": dict(prefix_sharing=True, kv_dtype=None),
+    "bf16_prefix": dict(prefix_sharing=True, kv_dtype="bfloat16"),
+}
+# bf16 vs f32 prediction/confidence drift bounds (empirically ~1.0 match
+# and <1e-3 max |dconf| on the gate workload; wide margins keep the gate
+# about correctness, not numerics)
+CAP_BF16_PRED_MATCH_MIN = 0.75
+CAP_BF16_DCONF_MAX = 0.05
+CAP_REPREFILL_RATIO_MIN = 1.8
+
+
+def same_op_ladder():
+    """Both stages run o_orig: $-parity between the doc-before-op and
+    op-first planes holds exactly on SAME-op fraction ladders.  (The
+    op-first layout bakes the op prefix into every document's KV — the
+    doc attends to it — so an op switch invalidates the doc cache and
+    stage 2 re-prefills; ``forced_ladder``'s sur_1 -> o_orig switch is
+    covered by tests/test_prefix_sharing.py, not gated here.)"""
+    thr = {0: 2.0, 1: 2.0}
+    return Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), thr),
+        Task(TaskConfig("proxy", "o_orig", 1.0), thr),
+    ])
+
+
+def _cap_run(tokz, docs, arm_kw, byte_budget=None):
+    """One capacity arm: fresh backends, same-op forced ladder, and a
+    PRIORITY-INVERTED arrival burst — each newcomer is submitted with an
+    arrival older than every cached veteran's (arrival=-j) and stepped
+    immediately, so under a budget its launch must steal slots from
+    cached documents (a batch drain would resolve veterans first and
+    recycle their slots without ever evicting; this burst is the
+    overload's adversarial limit).  Deterministic: logical arrivals, no
+    wall clock.  Returns (engine result, metric row, backends)."""
+    models = {"proxy": _model(1), "oracle": _model(2)}
+    backends = make_backends("arena", tokz, models, byte_budget=byte_budget,
+                             **arm_kw)
+    eng = CascadeEngine(backends, OPS, n_classes=2, batch_size=GATE_BATCH)
+    eng.start(same_op_ladder())
+    for j, d in enumerate(sorted(docs)):
+        eng.submit(d, docs[d], arrival=float(-j))
+        eng.step()
+    res = eng.drain()
+    assert set(res.pred) == set(docs), "capacity arm dropped documents"
+    st = res.stats
+    row = {
+        "evictions": int(st.evictions),
+        "re_prefill_tokens": int(st.re_prefill_tokens),
+        "prefix_hits": int(st.prefix_hits),
+        "cow_copies": int(st.cow_copies),
+        "arena_bytes_peak": int(st.arena_bytes_peak),
+        "launches": int(st.batches),
+        "cost": round(float(res.cost), 6),
+    }
+    return res, row, backends
+
+
+def run_capacity_section(tokz, smoke: bool):
+    """Fixed byte budget, three arms: f32 private KV (PR-1 plane), f32 +
+    prefix sharing, bf16 + prefix sharing.
+
+    Pass 1 (no pressure) is the correctness gate: per-document $ must be
+    EXACTLY equal across all three arms — the op-token memo and the bf16
+    compression change the physical work, never the billing — and bf16
+    preds/confs must sit within quantization tolerance of f32.
+
+    Pass 2 fixes ``byte_budget`` to HALF the f32 arms' unbudgeted peak
+    and drains the same burst: the f32 arms thrash (evict + re-prefill)
+    while bf16 halves the bytes per row — ~2x the effective rows in the
+    same budget — so the same overload resolves with strictly fewer
+    evictions and >= 1.8x fewer re-prefilled tokens.  Counts are
+    deterministic (seeded corpus/params, batch drain, no wall clock) and
+    gated exactly by check_regression.py.
+    """
+    docs = {d.doc_id: d.text
+            for d in generate_corpus(GATE_DOCS, avg_lines=12,
+                                     seed=GATE_SEED)}
+
+    # ---- pass 1: unbudgeted — parity + tolerance + peak measurement
+    free = {}
+    results = {}
+    for arm, kw in CAP_ARMS.items():
+        results[arm], free[arm], _ = _cap_run(tokz, docs, kw)
+    ids = sorted(docs)
+    r32, rp, r16 = (results[a] for a in
+                    ("f32_private", "f32_prefix", "bf16_prefix"))
+    parity_exact = all(r32.doc_cost[d] == rp.doc_cost[d] == r16.doc_cost[d]
+                       for d in ids)
+    pred_match = float(np.mean([rp.pred[d] == r16.pred[d] for d in ids]))
+    max_dconf = float(max(abs(rp.conf[d] - r16.conf[d]) for d in ids))
+    parity = {
+        "doc_cost_parity_exact": parity_exact,
+        "bf16_pred_match": round(pred_match, 4),
+        "bf16_max_dconf": round(max_dconf, 6),
+        "bf16_within_tolerance": (pred_match >= CAP_BF16_PRED_MATCH_MIN
+                                  and max_dconf <= CAP_BF16_DCONF_MAX),
+    }
+    assert parity["doc_cost_parity_exact"], \
+        "prefix/bf16 arenas changed the $-ledger"
+    assert parity["bf16_within_tolerance"], parity
+
+    # ---- pass 2: fixed byte budget = half the f32 unbudgeted peak
+    budget = free["f32_private"]["arena_bytes_peak"] // 2
+    over = {}
+    row_bytes = {}
+    for arm, kw in CAP_ARMS.items():
+        _, over[arm], backends = _cap_run(tokz, docs, kw, byte_budget=budget)
+        row_bytes[arm] = backends["proxy"].slot_nbytes(128)
+    a, b2 = over["f32_private"], over["bf16_prefix"]
+    reduction = a["re_prefill_tokens"] / max(b2["re_prefill_tokens"], 1)
+    overload = {
+        **{arm: over[arm] for arm in CAP_ARMS},
+        "fewer_evictions_bf16": b2["evictions"] < a["evictions"],
+        "reprefill_reduction": round(reduction, 2),
+        "reprefill_reduction_ge_1_8": reduction >= CAP_REPREFILL_RATIO_MIN,
+    }
+    assert a["evictions"] > 0, \
+        "overload pass produced no pressure on the f32 arm"
+    assert overload["fewer_evictions_bf16"], (a, b2)
+    assert overload["reprefill_reduction_ge_1_8"], (a, b2)
+
+    section = {
+        "docs": GATE_DOCS,
+        "ladder": "proxy o_orig 0.25 -> proxy o_orig 1.0 (forced)",
+        "byte_budget": int(budget),
+        # bf16 halves the per-row bytes, so the SAME budget hosts ~2x the
+        # rows (the eviction-reduction workhorse)
+        "effective_rows_at_budget": {
+            arm: int(budget // row_bytes[arm]) for arm in CAP_ARMS},
+        "parity": parity,
+        "no_pressure": free,
+        "overload": overload,
+    }
+    if not smoke:
+        # Poisson overload (wall clock, reported not gated): the same
+        # budget under a streamed burst — arrivals at 4x the nominal
+        # service rate so admission outruns capacity
+        stream = {}
+        for arm, kw in CAP_ARMS.items():
+            models = {"proxy": _model(1), "oracle": _model(2)}
+            backends = make_backends("arena", tokz, models,
+                                     byte_budget=budget, **kw)
+            eng = CascadeEngine(backends, OPS, n_classes=2,
+                                batch_size=GATE_BATCH)
+            warm_arena(eng, same_op_ladder(), docs, GATE_BATCH)
+            arrivals = poisson_arrivals(sorted(docs), 64.0, GATE_SEED)
+            sres, wall = drive_request_loop(eng, same_op_ladder(), docs,
+                                            arrivals)
+            st = sres.stats
+            stream[arm] = _stream_report(
+                len(docs), wall, st.latencies, st.total_new_tokens(),
+                st.total_cached_tokens(), sres.cost, st.batches,
+                evictions=st.evictions)
+            stream[arm]["re_prefill_tokens"] = int(st.re_prefill_tokens)
+        section["poisson_overload"] = stream
+    return section
+
+
+# ---------------------------------------------------------------------------
 # Deterministic smoke-gate summary (CI benchmark-regression gate)
 # ---------------------------------------------------------------------------
 
@@ -673,6 +850,14 @@ def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED):
         "cost": round(float(res.cost), 6),
         "launches": int(res.stats.batches),
         "cache_hit_rate": round(res.stats.cache_hit_rate(), 6),
+        # arena/prefix counters (PR 7): peak device bytes across arenas
+        # plus the prefix-sharing and eviction counters.  On the default
+        # doc-before-op plane hits/copies/re-prefills are structurally 0;
+        # the gate pins that (the capacity section exercises nonzero).
+        "arena_bytes_peak": int(res.stats.arena_bytes_peak),
+        "prefix_hits": int(res.stats.prefix_hits),
+        "cow_copies": int(res.stats.cow_copies),
+        "re_prefill_tokens": int(res.stats.re_prefill_tokens),
     }
 
     # -- multi-tenant interactive replay: shared server vs isolated
@@ -710,13 +895,18 @@ def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED):
         "parity": parity if parity is not None else paged_parity_check(),
     }
 
+    # -- capacity: prefix-sharing + bf16 arenas, fixed byte budget
+    # (explicit per-arm dtypes/planes: byte-identical whatever --kv-dtype
+    # the rest of the smoke ran under)
+    capacity = run_capacity_section(tokz, smoke=True)
+
     # -- chaos: fault-injected terminal-state + accounting invariants
     # (separate backends, computed last — cannot perturb the fault-free
     # metrics above)
     chaos = run_chaos_section(chaos_seed, models, tokz)
 
     return {"static": static, "multi_tenant": multi_tenant, "paged": paged,
-            "chaos": chaos,
+            "capacity": capacity, "chaos": chaos,
             "constants": {"docs": GATE_DOCS, "batch": GATE_BATCH,
                           "seed": GATE_SEED, "tenants": GATE_TENANTS}}
 
@@ -740,6 +930,13 @@ def main():
                          "the deterministic gate summary only")
     ap.add_argument("--chaos-seed", type=int, default=CHAOS_SEED,
                     help="seed for the fault-injection chaos section")
+    ap.add_argument("--kv-dtype", choices=("f32", "bf16"), default="f32",
+                    help="KV-cache storage dtype for every arena backend; "
+                         "bf16 halves arena bytes on the f32 models while "
+                         "the $-ledger stays exactly unchanged, so the "
+                         "same committed gate baseline applies to both "
+                         "legs (the capacity section pins its own arm "
+                         "dtypes and is immune to this flag)")
     ap.add_argument("--chaos-only", action="store_true",
                     help="run ONLY the chaos section (fast CI job): "
                          "asserts all-docs-terminal + exact accounting "
@@ -753,6 +950,8 @@ def main():
         args.docs = min(args.docs, 16)
         args.stream_docs = min(args.stream_docs, 12)
         args.batch_size = min(args.batch_size, 4)
+    if args.kv_dtype == "bf16":
+        _ARENA_KW["kv_dtype"] = "bfloat16"
 
     tokz = HashWordTokenizer(vocab_size=512)
     models = {"proxy": _model(1), "oracle": _model(2)}
@@ -841,6 +1040,16 @@ def main():
     report["paged"] = run_paged_section(tokz, args.smoke)
     print(json.dumps(report["paged"]["per_bucket"], indent=2), flush=True)
 
+    # ---- capacity: prefix sharing + bf16 arenas under a fixed byte
+    # budget (in --smoke the gate summary below runs the identical
+    # deterministic passes itself; full runs add the Poisson leg)
+    if not args.smoke:
+        print("== capacity (prefix sharing + bf16 arenas, byte budget) ==",
+              flush=True)
+        report["capacity"] = run_capacity_section(tokz, smoke=False)
+        print(json.dumps(report["capacity"]["overload"], indent=2),
+              flush=True)
+
     # ---- deterministic gate summary (fixed constants; CI compares this;
     # the parity A/B from the paged section is reused, not recomputed)
     print("== smoke gate (deterministic summary) ==", flush=True)
@@ -866,6 +1075,14 @@ def main():
             assert row["gather_copy_bytes_per_launch"] \
                 > row["paged_undo_log_bytes_per_launch"]
         assert all(report["paged"]["parity"].values())
+        # capacity: exact $-parity across planes/dtypes, bf16 resolving
+        # the same overload with fewer evictions and >= 1.8x fewer
+        # re-prefilled tokens (run_capacity_section asserts these too)
+        cap = report["smoke"]["capacity"]
+        assert cap["parity"]["doc_cost_parity_exact"]
+        assert cap["parity"]["bf16_within_tolerance"]
+        assert cap["overload"]["fewer_evictions_bf16"]
+        assert cap["overload"]["reprefill_reduction_ge_1_8"]
         # chaos: every injected-fault document terminal, $ exact, journal
         # recovery intact (run_chaos_section asserts these too)
         ch = report["smoke"]["chaos"]

@@ -165,6 +165,7 @@ def paged_decode_attention_pallas(
     slots: jnp.ndarray,           # [B] int32 arena row per sequence
     kv_len: jnp.ndarray,          # [B] int32 valid cache entries
     *,
+    block_tables: Optional[jnp.ndarray] = None,   # [B, S // block_kv] int32
     sm_scale: Optional[float] = None,
     block_kv: int = 512,
     interpret: bool = False,
@@ -185,6 +186,15 @@ def paged_decode_attention_pallas(
     LEGAL sentinel that may appear repeatedly (batch padding).  Bounds
     are validated host-side in ``ops.arena_decode_attention`` when the
     slot values are concrete.
+
+    ``block_tables`` [B, S // block_kv] generalizes the indirection from
+    one row per sequence to one row per CACHE BLOCK: block ``j`` of
+    sequence ``b`` is DMA'd from ``(block_tables[b, j], j, h)``.  The
+    within-row block index stays ``j`` — a shared prefix row stores its
+    KV at the same positions every consumer reads it at — which is what
+    lets many documents' leading blocks point at one pinned prefix row
+    (copy-on-write happens at the serving layer by editing the table).
+    When given, ``slots`` is ignored by the index maps.
     """
     B, Hq, Dh = q.shape
     _, S, Hkv, _ = k_arena.shape
@@ -205,17 +215,24 @@ def paged_decode_attention_pallas(
         paged=True,
     )
 
+    if block_tables is None:
+        def kv_map(b, h, j, slots_ref, kv_len_ref):
+            return (slots_ref[b], j, h, 0)
+        row_ids = slots.astype(jnp.int32)
+    else:
+        assert block_tables.shape == (B, nkv), (block_tables.shape, B, nkv)
+
+        def kv_map(b, h, j, bt_ref, kv_len_ref):
+            return (bt_ref[b, j], j, h, 0)
+        row_ids = block_tables.astype(jnp.int32)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,        # (slots, kv_len) — kv_len first in
+        num_scalar_prefetch=2,        # (rows, kv_len) — kv_len first in
         grid=(B, Hkv, nkv),           # kernel args is the dense kernel's
         in_specs=[                    # order; see call below
             pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
-            pl.BlockSpec((1, block_kv, 1, Dh),
-                         lambda b, h, j, slots_ref, kv_len_ref:
-                         (slots_ref[b], j, h, 0)),
-            pl.BlockSpec((1, block_kv, 1, Dh),
-                         lambda b, h, j, slots_ref, kv_len_ref:
-                         (slots_ref[b], j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh), kv_map),
+            pl.BlockSpec((1, block_kv, 1, Dh), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, g, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
         scratch_shapes=[
@@ -225,8 +242,8 @@ def paged_decode_attention_pallas(
         ],
     )
 
-    def paged_kernel(slots_ref, kv_len_ref, *rest):
-        # slots are consumed by the index maps only; the body masks by
+    def paged_kernel(rows_ref, kv_len_ref, *rest):
+        # row ids are consumed by the index maps only; the body masks by
         # kv_len exactly like the dense kernel (bitwise-equal math)
         return kernel(kv_len_ref, *rest)
 
@@ -235,5 +252,5 @@ def paged_decode_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dh), q.dtype),
         interpret=interpret,
-    )(slots.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k_arena, v_arena)
+    )(row_ids, kv_len.astype(jnp.int32), qg, k_arena, v_arena)
     return out.reshape(B, Hq, Dh)

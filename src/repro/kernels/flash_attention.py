@@ -202,6 +202,7 @@ def paged_flash_attention_pallas(
     slots: jnp.ndarray,           # [B] int32 arena row per sequence
     *,
     kv_valid: int,                # static: attend keys [0, kv_valid)
+    block_tables: Optional[jnp.ndarray] = None,   # [B, nkv] int32
     causal: bool = True,
     window: Optional[int] = None,
     q_offset: int = 0,
@@ -221,6 +222,12 @@ def paged_flash_attention_pallas(
     reserve past the bucket costs nothing.  Slot contract as in
     ``paged_decode_attention_pallas``: any row in [0, N_rows) is legal,
     the scratch row (N_rows - 1) explicitly so, duplicates allowed.
+
+    ``block_tables`` [B, ceil(kv_valid / block_kv)] switches the
+    indirection to per-block granularity: kv block ``j`` of row ``b`` is
+    DMA'd from ``(block_tables[b, j], j, h // g)`` — the within-row
+    index stays ``j``, so shared prefix rows are read at the positions
+    they were prefilled at.  When given, ``slots`` is ignored.
     """
     B, Hq, Sq, Dh = q.shape
     _, S_alloc, Hkv, _ = k_arena.shape
@@ -251,18 +258,25 @@ def paged_flash_attention_pallas(
         paged=True,
     )
 
+    if block_tables is None:
+        def kv_map(b, h, i, j, slots_ref, kv_len_ref):
+            return (slots_ref[b], j, h // g, 0)
+        row_ids = slots.astype(jnp.int32)
+    else:
+        assert block_tables.shape == (B, nkv), (block_tables.shape, B, nkv)
+
+        def kv_map(b, h, i, j, bt_ref, kv_len_ref):
+            return (bt_ref[b, j], j, h // g, 0)
+        row_ids = block_tables.astype(jnp.int32)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,        # (slots, kv_len)
+        num_scalar_prefetch=2,        # (rows, kv_len)
         grid=(B, Hq, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, Dh),
                          lambda b, h, i, j, *_: (b, h, i, 0)),
-            pl.BlockSpec((1, block_kv, 1, Dh),
-                         lambda b, h, i, j, slots_ref, kv_len_ref:
-                         (slots_ref[b], j, h // g, 0)),
-            pl.BlockSpec((1, block_kv, 1, Dh),
-                         lambda b, h, i, j, slots_ref, kv_len_ref:
-                         (slots_ref[b], j, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dh), kv_map),
+            pl.BlockSpec((1, block_kv, 1, Dh), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, Dh),
                                lambda b, h, i, j, *_: (b, h, i, 0)),
@@ -273,8 +287,8 @@ def paged_flash_attention_pallas(
         ],
     )
 
-    def paged_kernel(slots_ref, kv_len_ref, *rest):
-        # slots feed the index maps only; masking is by kv_len, exactly
+    def paged_kernel(rows_ref, kv_len_ref, *rest):
+        # row ids feed the index maps only; masking is by kv_len, exactly
         # as in the dense kernel (bitwise-equal math per block)
         return kernel(kv_len_ref, *rest)
 
@@ -283,4 +297,4 @@ def paged_flash_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
         interpret=interpret,
-    )(slots.astype(jnp.int32), kv_len.astype(jnp.int32), q, k_arena, v_arena)
+    )(row_ids, kv_len.astype(jnp.int32), q, k_arena, v_arena)

@@ -57,6 +57,33 @@ def _check_slots(slots, n_rows: int, where: str) -> None:
             f"min={int(s.min())} max={int(s.max())}")
 
 
+def _block_granularity(bt: jnp.ndarray, S: int, where: str) -> int:
+    """Infer (and validate) the cache-block size a block table addresses.
+
+    A block table is full-width by contract: ``[B, S // block]`` with
+    column ``j`` naming the arena row holding positions
+    ``[j * block, (j + 1) * block)``.  The granularity is therefore
+    recoverable from the table's width — no extra parameter to thread
+    through the jitted serving step."""
+    if bt.ndim != 2 or bt.shape[1] == 0 or S % bt.shape[1] != 0:
+        raise ValueError(
+            f"{where}: block table must be [B, S // block] with a width "
+            f"dividing the arena cache axis {S}, got shape {bt.shape}")
+    return S // bt.shape[1]
+
+
+def _gather_block_rows(arena: jnp.ndarray, bt: jnp.ndarray,
+                       block: int) -> jnp.ndarray:
+    """Assemble per-sequence caches [B, S, H, D] from a block table —
+    the bitwise reference for the paged kernels' in-kernel indirection
+    (block gathers move bits, never recompute them)."""
+    N, S, H, D = arena.shape
+    nb = S // block
+    flat = arena.reshape(N * nb, block, H, D)
+    idx = bt.astype(jnp.int32) * nb + jnp.arange(nb, dtype=jnp.int32)[None]
+    return jnp.take(flat, idx, axis=0).reshape(bt.shape[0], S, H, D)
+
+
 # ---------------------------------------------------------------------------
 # XLA blocked flash attention (static pair-list scan)
 # ---------------------------------------------------------------------------
@@ -269,12 +296,23 @@ def arena_decode_attention(
     slots: jnp.ndarray,           # [B] int32 arena row per sequence
     kv_len: jnp.ndarray,          # [B] valid cache entries per sequence
     *,
+    block_tables: Optional[jnp.ndarray] = None,   # [B, S // block] int32
     sm_scale: Optional[float] = None,
     impl: str = DEFAULT_IMPL,
     block_kv: int = 512,
 ) -> jnp.ndarray:
     """Decode attention reading straight from a slot arena — the real
     paged entry point.
+
+    ``block_tables`` [B, S // block] switches the indirection from one
+    arena row per sequence to one row per cache block (column ``j`` names
+    the row holding positions ``[j * block, (j+1) * block)``), which is
+    how many documents share a pinned operation-prefix row.  The table is
+    full-width; its granularity is inferred from its shape.  When the
+    granularity matches the kernel's effective kv block the table rides
+    in scalar-prefetch SMEM; otherwise (and on ``xla``/``naive``) the
+    blocks are gathered into dense per-sequence caches first — a pure
+    bit-move, so both planes stay bitwise-identical.
 
     The serving engine keeps one preallocated KV arena per length bucket
     and addresses sequences by slot id.  On Pallas runtimes the slot
@@ -293,9 +331,23 @@ def arena_decode_attention(
     fallback inherits ``jnp.take`` clip semantics and the paged kernel's
     behaviour is undefined — callers own the bound.
     """
+    S = k_arena.shape[1]
+    if block_tables is not None:
+        _check_slots(block_tables, k_arena.shape[0],
+                     "arena_decode_attention block_tables")
+        tb = _block_granularity(block_tables, S, "arena_decode_attention")
+        if impl in ("pallas", "pallas_interpret") \
+                and tb == min(block_kv, S) and S % tb == 0:
+            return paged_decode_attention_pallas(
+                q, k_arena, v_arena, slots, kv_len,
+                block_tables=block_tables, sm_scale=sm_scale,
+                block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+        k = _gather_block_rows(k_arena, block_tables, tb)
+        v = _gather_block_rows(v_arena, block_tables, tb)
+        return decode_attention(q, k, v, kv_len, sm_scale=sm_scale,
+                                impl=impl, block_kv=block_kv)
     _check_slots(slots, k_arena.shape[0], "arena_decode_attention")
     if impl in ("pallas", "pallas_interpret"):
-        S = k_arena.shape[1]
         if S % min(block_kv, S) == 0:
             return paged_decode_attention_pallas(
                 q, k_arena, v_arena, slots, kv_len, sm_scale=sm_scale,
@@ -313,6 +365,7 @@ def attention_paged(
     slots: jnp.ndarray,           # [B] int32 arena row per sequence
     *,
     kv_valid: int,                # static: attend keys [0, kv_valid)
+    block_tables: Optional[jnp.ndarray] = None,   # [B, S_alloc // block]
     causal: bool = True,
     window: Optional[int] = None,
     q_offset: int = 0,
@@ -323,6 +376,13 @@ def attention_paged(
     block_kv: int = 512,
 ) -> jnp.ndarray:
     """Prefix-extend attention over a slot arena (paged extend path).
+
+    ``block_tables`` [B, S_alloc // block] is the per-block indirection
+    of ``arena_decode_attention``: shared prefix rows appear in many
+    documents' leading columns.  The Pallas kernel consumes the first
+    ``kv_valid // block`` columns through scalar-prefetch SMEM when the
+    granularities line up; any other shape (and ``xla``/``naive``)
+    gathers blocks into dense caches — bitwise the same keys either way.
 
     The paged twin of ``attention`` for the serving engine's extend step:
     queries are the suffix at ``q_offset`` and cached keys live in
@@ -335,6 +395,28 @@ def attention_paged(
     path, mirroring ``arena_decode_attention``'s fallback.  Slot contract
     as in ``arena_decode_attention``.
     """
+    S_alloc = k_arena.shape[1]
+    if block_tables is not None:
+        _check_slots(block_tables, k_arena.shape[0],
+                     "attention_paged block_tables")
+        tb = _block_granularity(block_tables, S_alloc, "attention_paged")
+        Sq = q.shape[1]
+        if (impl in ("pallas", "pallas_interpret")
+                and Sq % min(block_q, Sq) == 0
+                and kv_valid % tb == 0 and tb == min(block_kv, kv_valid)):
+            qt = jnp.swapaxes(q, 1, 2)
+            out = paged_flash_attention_pallas(
+                qt, k_arena, v_arena, slots, kv_valid=kv_valid,
+                block_tables=block_tables[:, : kv_valid // tb],
+                causal=causal, window=window, q_offset=q_offset,
+                kv_len=kv_len, sm_scale=sm_scale, block_q=block_q,
+                block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+            return jnp.swapaxes(out, 1, 2)
+        k = _gather_block_rows(k_arena, block_tables, tb)[:, :kv_valid]
+        v = _gather_block_rows(v_arena, block_tables, tb)[:, :kv_valid]
+        return attention(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, kv_len=kv_len, sm_scale=sm_scale,
+                         impl=impl, block_q=block_q, block_kv=block_kv)
     _check_slots(slots, k_arena.shape[0], "attention_paged")
     if impl in ("pallas", "pallas_interpret"):
         Sq = q.shape[1]

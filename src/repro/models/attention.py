@@ -122,6 +122,10 @@ def attention_apply(
     kv_len: Optional[jnp.ndarray] = None,      # [B] true (unpadded) length
                                                # incl. this chunk, mode=extend
     slots: Optional[jnp.ndarray] = None,       # [B] arena rows (paged serving)
+    block_tables: Optional[jnp.ndarray] = None,  # [B, S_alloc // block] rows
+                                               # per cache block (prefix
+                                               # sharing); reads only — all
+                                               # writes go through ``slots``
     want_cache: bool = False,
     qk_norm: bool = False,
     theta: float = 10_000.0,
@@ -188,10 +192,15 @@ def attention_apply(
             assert window in (None, 0), \
                 "paged extend supports full attention only"
             kv_valid = min(q_offset + S, cache["k"].shape[1])
-            ck = cache["k"].at[slots, q_offset:q_offset + S].set(k)
-            cv = cache["v"].at[slots, q_offset:q_offset + S].set(v)
+            # the arena may store KV compressed (bf16 for f32 models):
+            # quantize on the scatter; the kernels upcast to f32 at read
+            ck = cache["k"].at[slots, q_offset:q_offset + S].set(
+                k.astype(cache["k"].dtype))
+            cv = cache["v"].at[slots, q_offset:q_offset + S].set(
+                v.astype(cache["v"].dtype))
             out = ops.attention_paged(
-                q, ck, cv, slots, kv_valid=kv_valid, causal=causal,
+                q, ck, cv, slots, kv_valid=kv_valid,
+                block_tables=block_tables, causal=causal,
                 q_offset=q_offset, kv_len=kv_len, impl=rt.attn_impl,
                 sm_scale=sm_scale, block_q=rt.block_q, block_kv=rt.block_kv,
             )
@@ -254,8 +263,10 @@ def attention_apply(
                 new_cache = {"k": ck, "v": cv}
         else:
             # full-attention extend: write new kv at [q_offset, q_offset+S)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, q_offset, 1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, q_offset, 1)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), q_offset, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), q_offset, 1)
             kv_valid = q_offset + S
             out = ops.attention(
                 q, ck[:, :kv_valid] if kv_valid < ck.shape[1] else ck,
@@ -279,10 +290,13 @@ def attention_apply(
             # kernel (scalar-prefetch SMEM), eliminating the gather copy
             assert window in (None, 0), \
                 "paged decode supports full attention only"
-            ck = cache["k"].at[slots, cache_len].set(k[:, 0])
-            cv = cache["v"].at[slots, cache_len].set(v[:, 0])
+            ck = cache["k"].at[slots, cache_len].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[slots, cache_len].set(
+                v[:, 0].astype(cache["v"].dtype))
             out1 = ops.arena_decode_attention(
-                q[:, 0], ck, cv, slots, cache_len + 1, sm_scale=sm_scale,
+                q[:, 0], ck, cv, slots, cache_len + 1,
+                block_tables=block_tables, sm_scale=sm_scale,
                 impl=rt.attn_impl, block_kv=rt.block_kv,
             )
         else:

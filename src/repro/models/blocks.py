@@ -102,12 +102,14 @@ def _attn_alloc(rcfg: ResolvedConfig, kind: str, s_alloc: int) -> int:
 
 
 def init_block_state(rcfg: ResolvedConfig, kind: str, batch: int,
-                     s_alloc: int, dtype=jnp.bfloat16):
+                     s_alloc: int, dtype=jnp.bfloat16, kv_dtype=None):
     b = rcfg.base
     if kind in _ATTN_KINDS:
+        # kv_dtype compresses ATTENTION caches only (the serving arena's
+        # storage dtype); recurrent SSM states keep the compute dtype
         return init_kv_cache(
             batch, _attn_alloc(rcfg, kind, s_alloc),
-            rcfg.padded_kv_heads, rcfg.head_dim, dtype)
+            rcfg.padded_kv_heads, rcfg.head_dim, kv_dtype or dtype)
     if kind == MLSTM:
         return ssm.init_mlstm_state(batch, b.num_heads, b.d_model // b.num_heads)
     if kind == SLSTM:
@@ -118,12 +120,12 @@ def init_block_state(rcfg: ResolvedConfig, kind: str, batch: int,
 
 
 def block_state_shape(rcfg: ResolvedConfig, kind: str, batch: int,
-                      s_alloc: int, dtype=jnp.bfloat16):
+                      s_alloc: int, dtype=jnp.bfloat16, kv_dtype=None):
     b = rcfg.base
     if kind in _ATTN_KINDS:
         return kv_cache_shape(
             batch, _attn_alloc(rcfg, kind, s_alloc),
-            rcfg.padded_kv_heads, rcfg.head_dim, dtype)
+            rcfg.padded_kv_heads, rcfg.head_dim, kv_dtype or dtype)
     if kind == MLSTM:
         return ssm.mlstm_state_shape(batch, b.num_heads, b.d_model // b.num_heads)
     if kind == SLSTM:
@@ -179,6 +181,8 @@ def block_apply(
     q_offset: int = 0,
     kv_len: Optional[jnp.ndarray] = None,      # [B] true length, mode=extend
     slots: Optional[jnp.ndarray] = None,       # [B] arena rows (paged serving)
+    block_tables: Optional[jnp.ndarray] = None,  # [B, nblocks] rows per cache
+                                               # block (prefix sharing)
     positions: Optional[jnp.ndarray] = None,
     positions3: Optional[jnp.ndarray] = None,
     dp_spec=None,
@@ -208,6 +212,7 @@ def block_apply(
             q_offset=q_offset,
             kv_len=kv_len,
             slots=slots,
+            block_tables=block_tables,
             want_cache=(mode != "train"),
             qk_norm=b.qk_norm,
             theta=b.rope_theta,

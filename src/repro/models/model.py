@@ -107,27 +107,29 @@ class LM:
         }
 
     # ---------------------------------------------------------------- states
-    def init_states(self, batch: int, s_alloc: int):
+    def init_states(self, batch: int, s_alloc: int, kv_dtype=None):
         stages = tuple(
             jax.tree.map(
                 lambda l: jnp.broadcast_to(l[None], (self.n_rep,) + l.shape),
                 blocks.init_block_state(self.rcfg, kind, batch, s_alloc,
-                                        self.dtype))
+                                        self.dtype, kv_dtype=kv_dtype))
             for kind in self.pattern)
         tail = tuple(
-            blocks.init_block_state(self.rcfg, kind, batch, s_alloc, self.dtype)
+            blocks.init_block_state(self.rcfg, kind, batch, s_alloc, self.dtype,
+                                    kv_dtype=kv_dtype)
             for kind in self.tail_kinds)
         return {"stages": stages, "tail": tail}
 
-    def state_shapes(self, batch: int, s_alloc: int):
+    def state_shapes(self, batch: int, s_alloc: int, kv_dtype=None):
         stages = tuple(
             jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((self.n_rep,) + s.shape, s.dtype),
                 blocks.block_state_shape(self.rcfg, kind, batch, s_alloc,
-                                         self.dtype))
+                                         self.dtype, kv_dtype=kv_dtype))
             for kind in self.pattern)
         tail = tuple(
-            blocks.block_state_shape(self.rcfg, kind, batch, s_alloc, self.dtype)
+            blocks.block_state_shape(self.rcfg, kind, batch, s_alloc,
+                                     self.dtype, kv_dtype=kv_dtype)
             for kind in self.tail_kinds)
         return {"stages": stages, "tail": tail}
 
@@ -263,8 +265,8 @@ class LM:
 
     # ------------------------------------------------------------------ core
     def _run_blocks(self, params, x, *, mode, states=None, cache_len=None,
-                    q_offset=0, kv_len=None, slots=None, positions=None,
-                    positions3=None):
+                    q_offset=0, kv_len=None, slots=None, block_tables=None,
+                    positions=None, positions3=None):
         rcfg, rt = self.rcfg, self.rt
         dp_spec = self._dp_spec()
         pattern = self.pattern
@@ -280,6 +282,7 @@ class LM:
                     stage_params[pi], x, kind=kind, rcfg=rcfg, rt=rt,
                     mode=mode, state=st, cache_len=cache_len,
                     q_offset=q_offset, kv_len=kv_len, slots=slots,
+                    block_tables=block_tables,
                     positions=positions, positions3=positions3,
                     dp_spec=dp_spec)
                 x = self._constrain_act(x)
@@ -329,8 +332,8 @@ class LM:
             x, ns, a = blocks.block_apply(
                 params["tail"][ti], x, kind=kind, rcfg=rcfg, rt=rt,
                 mode=mode, state=st, cache_len=cache_len, q_offset=q_offset,
-                kv_len=kv_len, slots=slots, positions=positions,
-                positions3=positions3, dp_spec=dp_spec)
+                kv_len=kv_len, slots=slots, block_tables=block_tables,
+                positions=positions, positions3=positions3, dp_spec=dp_spec)
             x = self._constrain_act(x)
             new_tail.append(ns)
             aux = aux + a
@@ -394,7 +397,8 @@ class LM:
 
     def extend(self, params, batch: Dict[str, jnp.ndarray], states,
                q_offset: int, kv_len: Optional[jnp.ndarray] = None,
-               slots: Optional[jnp.ndarray] = None):
+               slots: Optional[jnp.ndarray] = None,
+               block_tables: Optional[jnp.ndarray] = None):
         """Cascade fraction-extension: new tokens at [q_offset, q_offset+S).
 
         ``kv_len`` [B] is the TRUE (unpadded) sequence length including this
@@ -408,13 +412,19 @@ class LM:
         — the chunk's KV scatters into the arena and attention reads it
         through the paged kernels, so no per-launch row gather/scatter is
         needed.  Requires ``supports_paged_kv``.
+
+        ``block_tables`` [B, nblocks] (paged mode only) redirects READS:
+        cache block ``j`` of sequence ``b`` is fetched from arena row
+        ``block_tables[b, j]`` instead of ``slots[b]`` — the prefix-sharing
+        indirection.  Writes still land in row ``slots[b]``.
         """
         x = self.embed_inputs(params, batch)
         B, S, _ = x.shape
         positions = q_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         x, new_states, _ = self._run_blocks(
             params, x, mode="extend", states=states, q_offset=q_offset,
-            kv_len=kv_len, slots=slots, positions=positions,
+            kv_len=kv_len, slots=slots, block_tables=block_tables,
+            positions=positions,
             positions3=batch.get("positions3"),
             cache_len=jnp.full((B,), q_offset, jnp.int32))
         x = rmsnorm_apply(params["final_norm"], x[:, -1:],
@@ -424,14 +434,17 @@ class LM:
         return logits, new_states
 
     def decode_step(self, params, tokens: jnp.ndarray, states,
-                    pos: jnp.ndarray, slots: Optional[jnp.ndarray] = None):
+                    pos: jnp.ndarray, slots: Optional[jnp.ndarray] = None,
+                    block_tables: Optional[jnp.ndarray] = None):
         """One decode step. tokens [B], pos [B] -> (logits [B, V], states).
 
         ``slots`` [B] switches to PAGED mode: ``states`` is the slot arena
         and the step reads/writes row ``slots[b]`` in place (the token's
         KV lands at position ``pos[b]`` of that row; callers that must not
         dirty the row — the serving op suffix — bracket the steps with
-        ``take_kv_window``/``put_kv_window``)."""
+        ``take_kv_window``/``put_kv_window``).  ``block_tables``
+        [B, nblocks] redirects cache READS per block (prefix sharing);
+        the written token still lands in ``slots[b]``."""
         x = embed_apply(params["embed"], tokens[:, None]).astype(self.dtype)
         if getattr(self.rcfg.base, "embed_scale", False):
             x = x * jnp.asarray(self.rcfg.base.d_model ** 0.5, self.dtype)
@@ -442,7 +455,8 @@ class LM:
                 pos[:, None, None], (pos.shape[0], 1, 3)).astype(jnp.int32)
         x, new_states, _ = self._run_blocks(
             params, x, mode="decode", states=states, cache_len=pos,
-            slots=slots, positions=positions, positions3=positions3)
+            slots=slots, block_tables=block_tables, positions=positions,
+            positions3=positions3)
         x = rmsnorm_apply(params["final_norm"], x, self.rcfg.base.norm_eps)
         logits = lm_head_apply(params["embed"], x,
                                self.rcfg.base.logit_softcap)[:, 0]

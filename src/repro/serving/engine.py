@@ -294,12 +294,34 @@ class LMBackend:
     # the kernels wrappers — reference semantics, not the fast path); False
     # forces the PR-1 gather/scatter stage step.
     paged: Optional[bool] = None
+    # Arena STORAGE dtype for KV-cache leaves ("bfloat16" compresses an
+    # f32 model's arenas to half the bytes; int8 is staged behind the same
+    # switch).  Quantization happens on the extend/decode scatter; the
+    # attention kernels upcast to f32 at read (DMA-time dequant), so the
+    # $-ledger — billed from token counts, never physical bytes — is
+    # exactly unchanged.  None stores the compute dtype.
+    kv_dtype: Optional[str] = None
+    # Opt-in PREFIX SHARING (op-first prompt layout): operation tokens sit
+    # at positions [0, P) and are prefilled ONCE per (backend, op, bucket)
+    # into a pinned refcounted arena row; every attached document's
+    # leading block-table columns point at that row, with a copy-on-write
+    # partial-block copy into the document's private row where the op
+    # remainder and doc tokens share a block.  Requires the paged plane
+    # (block tables).  The default (False) keeps the doc-before-op layout
+    # bitwise unchanged.
+    prefix_sharing: bool = False
+    prefix_hits: int = 0             # attaches to a shared prefix row
+    cow_copies: int = 0              # partial-block copy-on-write copies
     _arenas: Dict[int, BucketArena] = field(default_factory=dict)
     _alloc: SlotAllocator = field(default_factory=SlotAllocator)
     _doc_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
     _idle: Dict[int, int] = field(default_factory=dict)
     _slot_nbytes: Dict[int, int] = field(default_factory=dict)
+    _prefix_ids: Dict[Tuple[int, str], int] = field(default_factory=dict)
+    _next_prefix_id: int = -1        # pseudo doc ids for prefix rows (< 0,
+    #                                  disjoint from server request ids >= 0)
     _step: Optional[Any] = None      # jitted stage step (lazy)
+    _prefix_step: Optional[Any] = None   # jitted prefix-layout step (lazy)
     pressure_retired: int = 0        # buckets freed mid-eviction (byte budget)
     host_overhead_s: float = 0.0     # pack/assembly/dispatch wall-clock
 
@@ -308,6 +330,9 @@ class LMBackend:
         self._alloc.reset()
         self._doc_slot.clear()
         self._idle.clear()
+        self._prefix_ids.clear()
+        self.prefix_hits = 0
+        self.cow_copies = 0
         self.pressure_retired = 0
         self.host_overhead_s = 0.0
         # the jitted step closes over model only; its compile cache survives
@@ -339,27 +364,51 @@ class LMBackend:
     def live_docs(self) -> List[int]:
         return list(self._doc_slot)
 
+    def cached_op(self, doc_id: int) -> Optional[str]:
+        """Operation id the document's cached prefix was built under
+        (prefix-sharing arenas only; None when uncached/untracked)."""
+        bs = self._doc_slot.get(doc_id)
+        if bs is None:
+            return None
+        bucket, slot = bs
+        ar = self._arenas.get(bucket)
+        return None if ar is None else ar.slot_op.get(slot)
+
     def release(self, doc_id: int) -> None:
         """Free the document's slot (it exited the cascade or was evicted)."""
         bs = self._doc_slot.pop(doc_id, None)
         if bs is not None:
-            self._alloc.release(bs[0], doc_id)
+            bucket, slot = bs
+            ar = self._arenas.get(bucket)
+            if ar is not None:
+                ar.detach_prefix(slot)     # unpin the shared op-prefix row
+            self._alloc.release(bucket, doc_id)
 
     # ------------------------------------------------------- memory control
     def arena_nbytes(self) -> int:
         """Total device bytes pinned by this backend's arenas."""
         return sum(ar.nbytes() for ar in self._arenas.values())
 
+    def _kv_jnp_dtype(self):
+        return None if self.kv_dtype is None else jnp.dtype(self.kv_dtype)
+
     def slot_nbytes(self, bucket: int) -> int:
         """Device bytes one arena row of ``bucket`` pins.
 
         Computed from state SHAPES (``jax.eval_shape`` semantics — nothing
-        is materialized), so the byte budget can project the cost of a
-        bucket whose arena does not exist yet.
+        is materialized) AT THE STORED DTYPE — a bf16-compressed arena
+        row bills half an f32 row — so the byte budget can project the
+        cost of a bucket whose arena does not exist yet and the billing
+        matches ``arena.nbytes()`` exactly.
         """
         n = self._slot_nbytes.get(bucket)
         if n is None:
-            shapes = self.model.state_shapes(1, self._s_alloc_for(bucket))
+            if self.kv_dtype is None:
+                shapes = self.model.state_shapes(1, self._s_alloc_for(bucket))
+            else:
+                shapes = self.model.state_shapes(
+                    1, self._s_alloc_for(bucket),
+                    kv_dtype=self._kv_jnp_dtype())
             n = sum(int(math.prod(l.shape)) * np.dtype(l.dtype).itemsize
                     for l in jax.tree.leaves(shapes))
             self._slot_nbytes[bucket] = n
@@ -433,6 +482,11 @@ class LMBackend:
         evicted: List[int] = []
         if self.slot_budget is None and self.byte_budget is None:
             return evicted
+        # unreferenced prefix rows go first: dropping the memo costs one
+        # re-prefill later but frees a slot without losing any document's
+        # cache (pinned rows — refs > 0 — are never touched here)
+        if self.over_budget(bucket, need_new):
+            self._reclaim_prefix_rows(bucket)
         for d in victims:
             if not self.over_budget(bucket, need_new):
                 break
@@ -454,10 +508,29 @@ class LMBackend:
             self.release(d)
             evicted.append(d)
             if (self.byte_budget is not None and vb != bucket
-                    and vb in self._arenas and self._alloc.live(vb) == 0):
+                    and vb in self._arenas and self._live_real(vb) == 0):
                 self.retire(vb)
                 self.pressure_retired += 1
         return evicted
+
+    def _live_real(self, bucket: int) -> int:
+        """Live DOCUMENT slots in ``bucket`` (prefix pseudo-slots, which
+        hold shared op rows rather than documents, excluded)."""
+        ar = self._arenas.get(bucket)
+        n_prefix = len(ar.prefix_row) if ar is not None else 0
+        return self._alloc.live(bucket) - n_prefix
+
+    def _reclaim_prefix_rows(self, bucket: int) -> None:
+        """Free every UNREFERENCED prefix row of ``bucket`` (slot returns
+        to the free list; the op re-prefills on next use)."""
+        ar = self._arenas.get(bucket)
+        if ar is None:
+            return
+        for op_key in ar.unreferenced_prefix_ops():
+            ar.drop_prefix(op_key)
+            pid = self._prefix_ids.pop((bucket, op_key), None)
+            if pid is not None:
+                self._alloc.release(bucket, pid)
 
     def note_launch(self) -> int:
         """Bucket retirement hook, called once per server step (on every
@@ -470,7 +543,7 @@ class LMBackend:
         """
         retired = 0
         for bucket in list(self._arenas):
-            if self._alloc.live(bucket) == 0:
+            if self._live_real(bucket) == 0:
                 self._idle[bucket] = self._idle.get(bucket, 0) + 1
                 if self._idle[bucket] >= self.retire_after:
                     self.retire(bucket)
@@ -480,9 +553,12 @@ class LMBackend:
         return retired
 
     def retire(self, bucket: int) -> None:
-        """Free an idle bucket's arena (no live slots)."""
-        assert self._alloc.live(bucket) == 0, \
+        """Free an idle bucket's arena (no live DOCUMENT slots; prefix
+        rows — necessarily unreferenced once the documents are gone — are
+        dropped with it, memo included)."""
+        assert self._live_real(bucket) == 0, \
             f"bucket {bucket} retired with live slots"
+        self._reclaim_prefix_rows(bucket)
         self._arenas.pop(bucket, None)
         self._alloc.retire_bucket(bucket)
         self._idle.pop(bucket, None)
@@ -490,19 +566,30 @@ class LMBackend:
     def _s_alloc_for(self, bucket: int) -> int:
         s_alloc = bucket + self.op_reserve
         impl = getattr(self.model.rt, "attn_impl", "")
-        if impl.startswith("pallas"):
+        if impl.startswith("pallas") or self.prefix_sharing:
             # keep the decode kernel's cache axis a block multiple so
-            # ops.decode_attention never pads K/V copies per step
+            # ops.decode_attention never pads K/V copies per step.  Prefix
+            # sharing rounds on EVERY impl: block tables are full-width
+            # [B, s_alloc // block] and the gather reference must agree
+            # with the Pallas plane on the table geometry.
             blk = getattr(self.model.rt, "block_kv", 512)
             if s_alloc > blk:           # <= blk is always a single block
                 s_alloc = -(-s_alloc // blk) * blk
         return s_alloc
 
+    def _block_size(self, bucket: int) -> int:
+        """Block-table granularity for ``bucket``: the decode kernel's kv
+        block, clamped to the row length (matches the effective block the
+        Pallas dispatch conditions in ``kernels.ops`` require)."""
+        s_alloc = self._s_alloc_for(bucket)
+        return min(getattr(self.model.rt, "block_kv", 512), s_alloc)
+
     def _arena(self, bucket: int) -> BucketArena:
         ar = self._arenas.get(bucket)
         if ar is None:
             ar = BucketArena(self.model, bucket, self._s_alloc_for(bucket),
-                             capacity=self._initial_capacity(bucket))
+                             capacity=self._initial_capacity(bucket),
+                             kv_dtype=self._kv_jnp_dtype())
             self._arenas[bucket] = ar
         return ar
 
@@ -523,6 +610,13 @@ class LMBackend:
         """Resolve the ``paged`` switch (None = auto): the paged stage step
         needs a paged-capable model and pays off when the kernels resolve
         slots in-kernel, i.e. on Pallas runtimes."""
+        if self.prefix_sharing:
+            # prefix sharing lives on block tables — paged plane only (the
+            # gather REFERENCE is the XLA fallback inside the paged kernels
+            # wrappers, not the row-copy stage step)
+            if self.paged is None:
+                self.paged = True
+            assert self.paged, "prefix_sharing requires the paged data plane"
         if self.paged is None:
             impl = getattr(getattr(self.model, "rt", None), "attn_impl", "")
             self.paged = bool(
@@ -595,6 +689,223 @@ class LMBackend:
             kwargs["donate_argnums"] = (1,)
         return jax.jit(step, **kwargs)
 
+    def _build_prefix_step(self):
+        assert self.uses_paged_kv()     # resolves paged=None, checks model
+        model = self.model
+
+        def prefix_step(params, arena_states, slots, block_tables, new_tok,
+                        last_tok, kv_true, ext_true, *, c_len: int,
+                        p_len: int):
+            # OP-FIRST layout: the shared operation prefix occupies cache
+            # positions [0, p_len) — prefilled once into a pinned arena
+            # row that the leading block-table columns point at — and the
+            # document lives at [p_len, p_len + f_len).  Writes (extend
+            # scatter, readout token) land in the document's own row
+            # (``slots``); reads resolve through ``block_tables``.
+            if new_tok.shape[1] > 0:
+                _, arena_states = model.extend(
+                    params, {"tokens": new_tok}, arena_states,
+                    q_offset=p_len + c_len, kv_len=p_len + ext_true,
+                    slots=slots, block_tables=block_tables)
+            # readout: re-feed the LAST TRUE document token at its own
+            # position and take its logits as the class readout — rows are
+            # ragged, so the extend's final-position logits belong to
+            # bucket PAD for short documents.  The re-fed token overwrites
+            # one KV position with decode-path values; a width-1 KV-window
+            # undo log keeps the cached row bitwise pristine.
+            pos = p_len + kv_true.astype(jnp.int32) - 1
+            saved = model.take_kv_window(arena_states, slots, pos, 1)
+            logits, arena_states = model.decode_step(
+                params, last_tok, arena_states, pos, slots=slots,
+                block_tables=block_tables)
+            arena_states = model.put_kv_window(arena_states, slots, pos, 1,
+                                               saved)
+            return logits, arena_states
+
+        kwargs: Dict[str, Any] = {"static_argnames": ("c_len", "p_len")}
+        if jax.default_backend() != "cpu":      # CPU donation only warns
+            kwargs["donate_argnums"] = (1,)
+        return jax.jit(prefix_step, **kwargs)
+
+    # ------------------------------------------------------- prefix sharing
+    def prefix_slot_needed(self, bucket: int, op_id: Optional[str]) -> bool:
+        """Would the next launch of ``op_id`` in ``bucket`` allocate a
+        fresh prefix row?  (The server's budget pass counts it as one
+        more new slot.)"""
+        if not self.prefix_sharing or op_id is None:
+            return False
+        ar = self._arenas.get(bucket)
+        return ar is None or op_id not in ar.prefix_row
+
+    def _ensure_prefix_row(self, arena: BucketArena, bucket: int,
+                           op_key: str, op_tokens: np.ndarray) -> int:
+        """Memoized op-prefix prefill: the first launch of ``op_key`` in
+        this bucket prefills the operation tokens ONCE into a dedicated
+        arena row (positions [0, P)); later launches just point their
+        block tables at it.  The row is allocated through the shared
+        ``SlotAllocator`` under a NEGATIVE pseudo doc id, so it can never
+        collide with a document slot but stays invisible to
+        ``live_docs()``/eviction (pinned while referenced)."""
+        row = arena.prefix_row.get(op_key)
+        if row is not None:
+            return row
+        pid = self._prefix_ids.get((bucket, op_key))
+        if pid is None:
+            pid = self._next_prefix_id
+            self._next_prefix_id -= 1
+            self._prefix_ids[(bucket, op_key)] = pid
+        row = self._alloc.slot_of(bucket, pid)
+        arena.ensure_capacity(self._alloc.high_water(bucket))
+        arena.clear_slot(row)
+        arena.prefix_row[op_key] = row
+        arena.prefix_refs[row] = 0
+        P = len(op_tokens)
+        arena.prefix_len[row] = P
+        # prefill the EFFECTIVE prefix [0, P_eff): op tokens plus PAD up
+        # to the blocking boundary (see _prefix_eff_len) — the pad gap's
+        # KV is deterministic and shared, so every document and every
+        # plane (pallas / gather reference / bf16) sees identical values
+        p_eff = self._prefix_eff_len(P)
+        tok = np.full(p_eff, PAD, np.int32)
+        tok[:P] = op_tokens
+        _, arena.states = self.model.extend(
+            self.params, {"tokens": jnp.asarray(tok)[None]},
+            arena.states, q_offset=0, kv_len=jnp.asarray([p_eff], jnp.int32),
+            slots=jnp.asarray([row], jnp.int32))
+        return row
+
+    def _prefix_eff_len(self, P: int) -> int:
+        """Layout length of an op prefix: the document must start at an
+        offset the attention blocking can address (chunk KV windows are
+        ``P_eff + cached + new`` wide, and the flash paths need widths
+        that are within one block or block multiples), so the prefix is
+        padded up to the smallest compliant length.  Big-block runtimes
+        (block >= op length) keep ``P_eff == P`` — there the op shares
+        via the copy-on-write remainder; small-block runtimes round up to
+        a block multiple — there it shares via whole block-table columns.
+        """
+        blk_q = getattr(self.model.rt, "block_q", 512)
+        blk_kv = getattr(self.model.rt, "block_kv", 512)
+        p_eff = P
+        while ((p_eff > blk_q and p_eff % blk_q)
+               or (p_eff > blk_kv and p_eff % blk_kv)):
+            p_eff += 1
+        assert p_eff <= self.op_reserve, \
+            f"op prefix pads to {p_eff} > op_reserve ({self.op_reserve})"
+        return p_eff
+
+    def _run_group_prefix(self, ids, doc_tokens, bucket, f_len, fraction,
+                          eff_c, op_tokens, n_classes, op_key):
+        """Prefix-sharing twin of the standard ``run_group`` body: op-first
+        layout, block-table indirection, memoized op prefill, one readout
+        decode instead of a per-launch op-suffix decode loop (and hence
+        zero undo-log bytes for the op suffix — only the width-1 readout
+        window is saved/restored, inside the step).
+
+        Billing is IDENTICAL to the standard plane — ``new_d = doc
+        segment + op_len`` per document — because $ follows the token
+        accounting contract, not physical work; the op prefill amortizing
+        across documents is exactly the engine-side analogue of the
+        paper's prompt-cache discount already modelled by
+        ``cached_discount``.
+        """
+        assert len(op_tokens) > 0, "operations must encode to >= 1 token"
+        P = len(op_tokens)
+        assert P <= self.op_reserve, \
+            f"operation longer than op_reserve ({P})"
+        p_eff = self._prefix_eff_len(P)           # layout offset of the doc
+        t0 = time.perf_counter()
+        arena = self._arena(bucket)
+        row = self._ensure_prefix_row(arena, bucket, op_key, op_tokens)
+        assert arena.prefix_len[row] == P, \
+            f"op {op_key!r} re-encoded to a different length"
+        slots = [self._slot_for(bucket, d, arena) for d in ids]
+        B = len(ids)
+        Bp = _pad_width(B)
+        n_new = f_len - eff_c                     # 0 => decode-only launch
+        s_alloc = arena.s_alloc
+        tb = self._block_size(bucket)
+        nb = s_alloc // tb
+        shared_full = p_eff // tb                 # whole blocks shared
+        rem_start = shared_full * tb
+        rem = p_eff - rem_start                   # partial-block remainder
+
+        # attach documents to the shared row; the partial block (where the
+        # op remainder and the document's first tokens share a cache
+        # block) diverges immediately, so it is copied into the private
+        # row at attach time — the copy-on-write moment
+        fresh: List[int] = []
+        for i, d in enumerate(ids):
+            slot = slots[i]
+            if eff_c > 0:
+                assert arena.slot_op.get(slot) == op_key, \
+                    f"doc {d} cached under op {arena.slot_op.get(slot)!r} " \
+                    f"launched as {op_key!r} (server must invalidate)"
+            if arena.slot_prefix.get(slot) is None:
+                arena.attach_prefix(slot, op_key)
+                fresh.append(slot)
+        self.prefix_hits += len(fresh)
+        if fresh and rem > 0:
+            n = len(fresh)
+            src = jnp.full((n,), row, jnp.int32)
+            dst = jnp.asarray(fresh, jnp.int32)
+            start = jnp.full((n,), rem_start, jnp.int32)
+            win = self.model.take_kv_window(arena.states, src, start, rem)
+            arena.states = self.model.put_kv_window(arena.states, dst,
+                                                    start, rem, win)
+            self.cow_copies += n
+
+        slots_arr = np.full(Bp, arena.scratch_slot, np.int32)
+        slots_arr[:B] = slots
+        # full-width table [Bp, s_alloc // tb]: column j is the arena row
+        # holding positions [j*tb, (j+1)*tb) — leading shared columns hit
+        # the pinned prefix row, the rest the document's private row
+        bt = np.repeat(slots_arr[:, None], nb, axis=1)
+        if shared_full > 0:
+            bt[:B, :shared_full] = row
+        new_tok = np.full((Bp, n_new), PAD, np.int32)
+        last_tok = np.full(Bp, PAD, np.int32)
+        kv_true = np.ones(Bp, np.int32)
+        ext_true = np.ones(Bp, np.int32)
+        new_d = np.zeros(B, np.int64)
+        cached_d = np.zeros(B, np.int64)
+        for i, d in enumerate(ids):
+            toks = doc_tokens[d]
+            slot = slots[i]
+            if n_new > 0:
+                seg = toks[min(eff_c, len(toks)): min(f_len, len(toks))]
+                new_tok[i, : len(seg)] = seg
+                new_d[i] = len(seg)
+                cached_d[i] = min(eff_c, len(toks))
+                ext_true[i] = min(eff_c, len(toks)) + len(seg)
+            else:
+                cached_d[i] = min(int(arena.true_len[slot]),
+                                  self._true_len(toks, fraction))
+            kt = self._true_len(toks, fraction)
+            kv_true[i] = kt
+            last_tok[i] = toks[kt - 1]
+        self.host_overhead_s += time.perf_counter() - t0
+
+        if self._prefix_step is None:
+            self._prefix_step = self._build_prefix_step()
+        t0 = time.perf_counter()
+        logits, new_states = self._prefix_step(
+            self.params, arena.states, jnp.asarray(slots_arr),
+            jnp.asarray(bt), jnp.asarray(new_tok), jnp.asarray(last_tok),
+            jnp.asarray(kv_true), jnp.asarray(ext_true),
+            c_len=eff_c, p_len=p_eff)
+        arena.states = new_states
+        self.host_overhead_s += time.perf_counter() - t0   # async dispatch
+
+        if n_new > 0:
+            for i, d in enumerate(ids):
+                slot = slots[i]
+                arena.cached_len[slot] = f_len
+                arena.true_len[slot] = min(f_len, len(doc_tokens[d]))
+        pred, conf = self.class_confidences(
+            np.asarray(logits)[:B], n_classes)
+        return pred, conf, new_d + P, cached_d
+
     # ----------------------------------------------------- paged accounting
     def gather_bytes_per_launch(self, bucket: int, batch: int) -> int:
         """Device bytes the GATHER stage step copies per launch just to
@@ -666,14 +977,24 @@ class LMBackend:
         return pred, conf, new_true_total, cached_true_total
 
     def run_group(self, ids, doc_tokens, bucket, f_len, fraction, eff_c,
-                  op_tokens, n_classes):
+                  op_tokens, n_classes, op_id: Optional[str] = None):
         """One static-signature launch: all ``ids`` share ``eff_c``.
 
         Returns (pred [B], conf [B], new_tokens [B], cached_tokens [B])
         with PER-DOCUMENT true token counts, so the request loop can
         attribute cost to each document's own stage and query even when a
         launch mixes stages or registered queries.
+
+        ``op_id`` names the operation for the prefix-sharing memo; callers
+        that don't thread one get a content-derived key (same tokens ==
+        same prefix row either way).
         """
+        if self.prefix_sharing:
+            op_key = op_id if op_id is not None else \
+                "op:" + ",".join(str(int(t)) for t in op_tokens)
+            return self._run_group_prefix(ids, doc_tokens, bucket, f_len,
+                                          fraction, eff_c, op_tokens,
+                                          n_classes, op_key)
         assert len(op_tokens) > 0, "operations must encode to >= 1 token"
         assert len(op_tokens) <= self.op_reserve, \
             f"operation longer than op_reserve ({len(op_tokens)})"
@@ -951,6 +1272,10 @@ class CascadeServer:
     _stalled_steps: int = field(default=0, repr=False)
     _breaker_trips: int = field(default=0, repr=False)
     _failed_launches: int = field(default=0, repr=False)
+    # ---- shared-substrate memory counters (mirrored into query stats)
+    _arena_bytes_peak: int = field(default=0, repr=False)
+    _prefix_hits: int = field(default=0, repr=False)
+    _cow_copies: int = field(default=0, repr=False)
 
     def __post_init__(self) -> None:
         if not self._tok:
@@ -994,6 +1319,9 @@ class CascadeServer:
         self._stalled_steps = 0
         self._breaker_trips = 0
         self._failed_launches = 0
+        self._arena_bytes_peak = 0
+        self._prefix_hits = 0
+        self._cow_copies = 0
         if self.journal is not None:    # dropped queries: journal restarts
             self.journal = RequestJournal()
 
@@ -1125,15 +1453,26 @@ class CascadeServer:
         if (getattr(be, "slot_budget", None) is None
                 and getattr(be, "byte_budget", None) is None):
             return launch
-        need = sum(1 for d in launch.doc_ids if not be.has_slot(d))
+        # the shared op-prefix row (first launch of this op in this
+        # bucket) is one more fresh slot the budgets must host
+        extra = 1 if (hasattr(be, "prefix_slot_needed")
+                      and be.prefix_slot_needed(launch.bucket, launch.op_id)
+                      ) else 0
+        need = sum(1 for d in launch.doc_ids if not be.has_slot(d)) + extra
         if not be.over_budget(launch.bucket, need):
             return launch
         victims = self._victim_order(be, set(launch.doc_ids))
+        # snapshot BEFORE eviction releases the slots: the true cached
+        # tokens each victim loses is exactly what its next launch must
+        # re-prefill (the capacity metric the benchmark gates on)
+        lost = {d: be.true_cached_len(d) for d in victims}
         for d in be.evict_for_room(launch.bucket, need, victims):
             req = self._requests[d]
             req.cached[be.name] = 0
             req.evictions += 1
-            self._query_stats[req.query_id].evictions += 1
+            st = self._query_stats[req.query_id]
+            st.evictions += 1
+            st.re_prefill_tokens += lost[d]
         retired = getattr(be, "pressure_retired", 0)
         if retired:
             be.pressure_retired = 0
@@ -1144,7 +1483,7 @@ class CascadeServer:
         # trim: keep the oldest prefix whose new allocations fit (>= 1 doc)
         keep_ids: List[int] = []
         keep_stages: List[int] = []
-        used = 0
+        used = extra        # the prefix row allocates regardless of trim
         for d, s in zip(launch.doc_ids, launch.stages):
             cost = 0 if be.has_slot(d) else 1
             if keep_ids and used + cost > room:
@@ -1196,7 +1535,8 @@ class CascadeServer:
             p, c, new_d, cached_d = be.run_group(
                 ids, self._tok[launch.model], launch.bucket, launch.f_len,
                 launch.fraction, launch.cached_len,
-                self._op_tokens(be, launch.op_id), self.n_classes)
+                self._op_tokens(be, launch.op_id), self.n_classes,
+                op_id=launch.op_id)
         except Exception as exc:        # noqa: BLE001 — isolate the launch
             self._on_launch_failure(launch, exc, now, terminal)
             self._note_progress(True)
@@ -1230,8 +1570,10 @@ class CascadeServer:
             else:
                 req.stage += 1
                 req.solo = False        # rejoin cohort launches
+                self._sync_cached_for_stage(req)
                 self._queue.push(req)
         self._launches += 1
+        self._sync_shared_counters()
         for qid in touched:       # a query's ``batches`` = launches it rode
             self._query_stats[qid].batches += 1
         # retirement ticks on EVERY backend: one that stops receiving
@@ -1246,6 +1588,46 @@ class CascadeServer:
                 self._apply_arena_loss(bname, bucket)
         self._note_progress(True)
         return terminal
+
+    def _sync_cached_for_stage(self, req: DocRequest) -> None:
+        """Prefix-sharing invalidation on op switch.
+
+        In the op-first layout a document's cached KV was computed
+        ATTENDING TO the operation prefix in front of it, so advancing to
+        a stage that runs a DIFFERENT op on the same prefix-sharing
+        backend makes the whole cache invalid: release the slot and
+        restart from ``cached_len = 0`` (the re-prefill bills as new
+        tokens, exactly like an eviction).  Doc-before-op backends keep
+        their cache — that layout never bakes the op into document KV.
+        """
+        stages = self._handles[req.query_id].stages
+        if req.stage >= len(stages):
+            return
+        model, op_id = stages[req.stage][0], stages[req.stage][1]
+        be = self.backends[model]
+        if not getattr(be, "prefix_sharing", False):
+            return
+        cached_op = be.cached_op(req.doc_id)
+        if cached_op is not None and cached_op != op_id:
+            be.release(req.doc_id)
+            req.cached[model] = 0
+
+    def _sync_shared_counters(self) -> None:
+        """Refresh shared-substrate memory counters after a launch and
+        mirror them into every query's stats (like breaker trips: the
+        substrate is shared, so per-query stats report the server-wide
+        values and the aggregate counts them once)."""
+        self._prefix_hits = sum(getattr(b, "prefix_hits", 0)
+                                for b in self.backends.values())
+        self._cow_copies = sum(getattr(b, "cow_copies", 0)
+                               for b in self.backends.values())
+        nbytes = sum(b.arena_nbytes() for b in self.backends.values()
+                     if hasattr(b, "arena_nbytes"))
+        self._arena_bytes_peak = max(self._arena_bytes_peak, nbytes)
+        for st in self._query_stats.values():
+            st.prefix_hits = self._prefix_hits
+            st.cow_copies = self._cow_copies
+            st.arena_bytes_peak = self._arena_bytes_peak
 
     # ------------------------------------------------------- fault handling
     def _finish(self, req: DocRequest, status: str, now: float,
@@ -1332,6 +1714,7 @@ class CascadeServer:
         elif req.stage < final:
             req.stage = final
             req.solo = True
+            self._sync_cached_for_stage(req)
             self._queue.push(req)
         else:
             self._finish(req, FAILED, now,
@@ -1349,11 +1732,15 @@ class CascadeServer:
         for req in self._queue.ready():
             handle = self._handles[req.query_id]
             final = len(handle.stages) - 1
+            advanced = False
             while req.stage < final:
                 h = self._health.get(handle.stages[req.stage][0])
                 if h is None or not h.is_open(self._attempts):
                     break
                 req.stage += 1
+                advanced = True
+            if advanced:
+                self._sync_cached_for_stage(req)
 
     def _apply_arena_loss(self, bname: str, bucket: int) -> None:
         """Replay the eviction path for every live document of a lost
@@ -1364,11 +1751,14 @@ class CascadeServer:
         for d in list(be.live_docs()):
             if be._doc_slot[d][0] != bucket:
                 continue
+            lost = be.true_cached_len(d)     # before release zeroes it
             be.release(d)
             req = self._requests.get(d)
             if req is not None and not req.done:
                 req.cached[bname] = 0
-                self._query_stats[req.query_id].recovered_docs += 1
+                st = self._query_stats[req.query_id]
+                st.recovered_docs += 1
+                st.re_prefill_tokens += lost
 
     def _note_progress(self, progressed: bool) -> None:
         """Liveness watchdog: ``stall_limit`` consecutive no-progress
@@ -1444,6 +1834,9 @@ class CascadeServer:
         agg.batches = self._launches
         agg.retired_buckets = self._retired
         agg.breaker_trips = self._breaker_trips   # shared, counted once
+        agg.prefix_hits = self._prefix_hits       # shared substrate, ditto
+        agg.cow_copies = self._cow_copies
+        agg.arena_bytes_peak = self._arena_bytes_peak
         return agg
 
     @staticmethod
@@ -1461,6 +1854,8 @@ class CascadeServer:
         dst.timeouts += src.timeouts
         dst.failures += src.failures
         dst.recovered_docs += src.recovered_docs
+        dst.re_prefill_tokens += src.re_prefill_tokens
+        dst.arena_bytes_peak = max(dst.arena_bytes_peak, src.arena_bytes_peak)
 
     def occupancy(self) -> float:
         """Mean documents per launch across every query the server has

@@ -518,6 +518,14 @@ class ServeStats:
     failures: int = 0                  # docs resolved FAILED
     breaker_trips: int = 0             # backend circuit-breaker openings
     recovered_docs: int = 0            # arena-loss replays + journal resubmits
+    # memory/prefix-sharing counters (PR-7 capacity accounting)
+    arena_bytes_peak: int = 0          # max device bytes across arenas seen
+    re_prefill_tokens: int = 0         # true cached tokens lost to eviction
+    #                                    or arena loss (work to re-prefill)
+    prefix_hits: int = 0               # docs attached to an existing shared
+    #                                    op-prefix row (op prefill amortized)
+    cow_copies: int = 0                # copy-on-write partial-block copies
+    #                                    (prefix remainder -> private row)
 
     def latency_quantile(self, q: float) -> float:
         if not self.latencies:

@@ -326,3 +326,90 @@ def test_flash_attention_fully_masked_rows_are_zero():
                         impl="pallas_interpret", block_q=16, block_kv=16)
     assert bool(jnp.all(jnp.isfinite(out)))
     np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+# ---------------------------------------------------------------------------
+# Block tables: per-block row indirection (prefix sharing)
+# ---------------------------------------------------------------------------
+
+def _materialize(arena, bt, tb):
+    """Compose each batch row's virtual cache from its block table:
+    positions [j*tb, (j+1)*tb) come from arena row bt[b, j]."""
+    bt = np.asarray(bt)
+    out = np.stack([
+        np.concatenate([np.asarray(arena[bt[b, j], j * tb:(j + 1) * tb])
+                        for j in range(bt.shape[1])], axis=0)
+        for b in range(bt.shape[0])])
+    return jnp.asarray(out)
+
+
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_paged_decode_block_tables_bitwise(impl):
+    """Block-tabled decode == the SAME impl over a materialized arena,
+    bitwise: the leading columns point at a shared prefix row, the rest
+    at each document's private row (prefix-sharing read geometry)."""
+    N, B, S, Hq, Hkv, Dh, tb = 6, 3, 64, 4, 2, 16, 16
+    key = jax.random.PRNGKey(21)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S, Hkv, Dh)
+    shared = 4                                   # the pinned prefix row
+    slots = jnp.asarray([0, 2, 3], jnp.int32)
+    bt = np.repeat(np.asarray(slots)[:, None], S // tb, axis=1)
+    bt[:, 0] = shared                            # first block shared
+    bt = jnp.asarray(bt, jnp.int32)
+    kv_len = jnp.asarray([40, 64, 17], jnp.int32)
+    out_bt = ops.arena_decode_attention(
+        q, k_arena, v_arena, slots, kv_len, block_tables=bt,
+        impl=impl, block_kv=tb)
+    km = _materialize(k_arena, bt, tb)
+    vm = _materialize(v_arena, bt, tb)
+    ident = jnp.arange(B, dtype=jnp.int32)
+    out_mat = ops.arena_decode_attention(
+        q, km, vm, ident, kv_len, impl=impl, block_kv=tb)
+    np.testing.assert_array_equal(np.asarray(out_bt), np.asarray(out_mat))
+
+
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_paged_extend_block_tables_bitwise(impl):
+    """Block-tabled flash extend == the SAME impl over a materialized
+    arena, bitwise (mid-cascade fraction extension reading through the
+    shared prefix block)."""
+    N, B, S_alloc, Hq, Hkv, Dh, tb = 6, 2, 64, 4, 2, 16, 16
+    key = jax.random.PRNGKey(22)
+    Sq, q_off, kv_valid = 16, 16, 32
+    q = jax.random.normal(key, (B, Sq, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S_alloc, Hkv, Dh)
+    shared = 5
+    slots = jnp.asarray([1, 3], jnp.int32)
+    bt = np.repeat(np.asarray(slots)[:, None], S_alloc // tb, axis=1)
+    bt[:, 0] = shared
+    bt = jnp.asarray(bt, jnp.int32)
+    kv_len = jnp.asarray([kv_valid, q_off + 7], jnp.int32)
+    out_bt = ops.attention_paged(
+        q, k_arena, v_arena, slots, kv_valid=kv_valid, q_offset=q_off,
+        kv_len=kv_len, block_tables=bt, impl=impl, block_q=tb, block_kv=tb)
+    km = _materialize(k_arena, bt, tb)
+    vm = _materialize(v_arena, bt, tb)
+    ident = jnp.arange(B, dtype=jnp.int32)
+    out_mat = ops.attention_paged(
+        q, km, vm, ident, kv_valid=kv_valid, q_offset=q_off,
+        kv_len=kv_len, impl=impl, block_q=tb, block_kv=tb)
+    np.testing.assert_array_equal(np.asarray(out_bt), np.asarray(out_mat))
+
+
+def test_paged_decode_bf16_arena_tolerance():
+    """A bf16-stored arena decodes within quantization tolerance of the
+    f32 arena it was cast from (the serving arena's compressed storage)."""
+    N, B, S, Hq, Hkv, Dh = 5, 3, 64, 4, 2, 16
+    key = jax.random.PRNGKey(23)
+    q = jax.random.normal(key, (B, Hq, Dh), jnp.float32)
+    k_arena, v_arena = _mk_arena(key, N, S, Hkv, Dh)
+    slots = jnp.asarray([0, 2, 4], jnp.int32)
+    kv_len = jnp.asarray([64, 33, 16], jnp.int32)
+    out32 = ops.arena_decode_attention(
+        q, k_arena, v_arena, slots, kv_len,
+        impl="pallas_interpret", block_kv=16)
+    out16 = ops.arena_decode_attention(
+        q, k_arena.astype(jnp.bfloat16), v_arena.astype(jnp.bfloat16),
+        slots, kv_len, impl="pallas_interpret", block_kv=16)
+    np.testing.assert_allclose(np.asarray(out16, np.float32),
+                               np.asarray(out32), atol=3e-2, rtol=3e-2)
