@@ -74,6 +74,15 @@ TOLERANCES = {
     "capacity.overload.f32_private.re_prefill_tokens": ("exact", 0),
     "capacity.overload.bf16_prefix.evictions": ("exact", 0),
     "capacity.overload.bf16_prefix.re_prefill_tokens": ("exact", 0),
+    # telemetry trace probe: structural span/event/launch counts from the
+    # FIXED-seed chaos workload (a pure function of the source tree —
+    # zero backoff, logical arrivals — so they gate exactly; timings in
+    # the embedded snapshot are intentionally NOT gated)
+    "telemetry.trace_probe.spans":             ("exact", 0),
+    "telemetry.trace_probe.events_total":      ("exact", 0),
+    "telemetry.trace_probe.launch_records":    ("exact", 0),
+    "telemetry.trace_probe.failed_launch_records": ("exact", 0),
+    "telemetry.trace_probe.metric_series":     ("exact", 0),
 }
 
 # invariants the FRESH summary must satisfy regardless of the baseline
@@ -105,6 +114,16 @@ REQUIRED_TRUE = (
     "chaos.recovery_all_terminal",
     "chaos.recovery_restored_exact",
     "chaos.recovery_accounting_exact",
+    # telemetry (PR 8): the default-on counters level must be bitwise
+    # invisible to the fault-free data plane (preds/confs/per-doc $ and
+    # arena device state equal a level="off" run exactly); the trace
+    # probe's spans must be well-formed under injected faults, nothing
+    # dropped from the bounded rings at gate scale, and every launch's
+    # sched/host/dispatch/device segments must sum to its wall time
+    "telemetry.counters_bitwise_inert",
+    "telemetry.trace_probe.spans_well_formed",
+    "telemetry.trace_probe.no_dropped_events",
+    "telemetry.trace_probe.segments_sum_ok",
 )
 
 

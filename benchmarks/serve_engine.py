@@ -806,6 +806,112 @@ def run_capacity_section(tokz, smoke: bool):
 
 
 # ---------------------------------------------------------------------------
+# Telemetry section (PR 8): bitwise inertness + span/timeline invariants
+# ---------------------------------------------------------------------------
+
+def _arena_leaves(backends):
+    """Every device leaf of every bucket arena, host-side, in a canonical
+    order — the bitwise fingerprint for the telemetry-inertness probe."""
+    out = []
+    for name in sorted(backends):
+        be = backends[name]
+        for bucket in sorted(getattr(be, "_arenas", {})):
+            for leaf in jax.tree_util.tree_leaves(be._arenas[bucket].states):
+                out.append((name, bucket, np.asarray(leaf)))
+    return out
+
+
+def run_telemetry_section(models, tokz, trace_out=None):
+    """Observability gates (PR 8), two probes on separate backends.
+
+    INERTNESS: the default-on ``level="counters"`` telemetry must be
+    bitwise invisible to the fault-free data plane — preds, confs,
+    per-document $, and the full arena device state must equal a
+    ``level="off"`` run exactly (instrumentation is host-side dict/float
+    work plus ``perf_counter`` reads; nothing crosses into jitted code).
+
+    TRACE PROBE: the chaos workload (fixed seed ``CHAOS_SEED`` — NOT
+    ``--chaos-seed``, so these counts stay a pure function of the source
+    tree and are gated exactly) re-runs at ``level="trace"``.  Spans must
+    be well-formed under injected faults (SUBMIT-opened, terminal-closed,
+    monotone stamps), nothing may be dropped at the gate workload's
+    scale, and each launch's sched/host/dispatch/device segments must sum
+    to its wall time within 5% (exact by construction: host is the
+    clamped residual).  Structural counts (spans, events, launch records,
+    metric series) are deterministic — the chaos launch schedule is a
+    pure function of the seed and the call index (zero backoff, logical
+    arrivals) — and gated exactly; timings in the embedded snapshot are
+    reported, never gated.  ``trace_out`` additionally writes the probe's
+    Chrome/Perfetto trace JSON (the CI artifact).
+    """
+    docs = {d.doc_id: d.text
+            for d in generate_corpus(GATE_DOCS, avg_lines=12,
+                                     seed=GATE_SEED)}
+
+    # ---- inertness: counters (default) vs off, bitwise
+    runs, arenas = {}, {}
+    for level in ("off", "counters"):
+        eng, backends = make_engine("arena", tokz, models, GATE_BATCH)
+        eng.telemetry.level = level
+        runs[level] = eng.run(forced_ladder(), docs)
+        arenas[level] = _arena_leaves(backends)
+    a, b = runs["off"], runs["counters"]
+    inert = (a.pred == b.pred and a.conf == b.conf
+             and a.doc_cost == b.doc_cost
+             and len(arenas["off"]) == len(arenas["counters"])
+             and all(ka == kb and ba == bb and np.array_equal(la, lb)
+                     for (ka, ba, la), (kb, bb, lb)
+                     in zip(arenas["off"], arenas["counters"])))
+
+    # ---- trace probe: chaos workload at level="trace", fixed seed
+    chaos_docs = {d.doc_id: d.text
+                  for d in generate_corpus(CHAOS_DOCS, avg_lines=12,
+                                           seed=GATE_SEED)}
+    server = _chaos_server(models, tokz)
+    server.telemetry.level = "trace"
+    plan = FaultPlan(seed=CHAOS_SEED, launch_failure_p=0.25, nan_p=0.15,
+                     latency_spike_p=0.1, spike_s=1e-4, arena_loss_at=4)
+    FaultInjector(plan).install(server)
+    _chaos_submit(server, chaos_docs)
+    server.drain()
+    snap = server.telemetry_snapshot()
+    if trace_out:
+        from repro.serving.telemetry import write_chrome_trace
+        write_chrome_trace(server.telemetry, trace_out)
+        print(f"wrote Perfetto trace to {trace_out} "
+              f"(open at https://ui.perfetto.dev)", flush=True)
+    c = snap["counters"]
+    probe = {
+        "seed": CHAOS_SEED,
+        "docs": CHAOS_DOCS,
+        # booleans, REQUIRED_TRUE in check_regression.py (no baseline)
+        "spans_well_formed": bool(snap["spans"]["ok"]),
+        "no_dropped_events": (c["dropped_events"] == 0
+                              and c["dropped_launch_records"] == 0
+                              and c["dropped_metric_series"] == 0),
+        "segments_sum_ok": bool(c["segments_sum_ok"]),
+        # structural counts, gated exactly against the baseline
+        "spans": int(snap["spans"]["checked"]),
+        "events_total": int(c["events_total"]),
+        "launch_records": int(c["launch_records"]),
+        "failed_launch_records": int(c["failed_launch_records"]),
+        "metric_series": int(c["metric_series"]),
+    }
+    section = {
+        "counters_bitwise_inert": bool(inert),
+        "trace_probe": probe,
+        # full snapshot for humans + CI artifacts; timings NOT gated
+        "snapshot": snap,
+    }
+    assert section["counters_bitwise_inert"], \
+        "level='counters' telemetry perturbed the fault-free data plane"
+    assert probe["spans_well_formed"], snap["spans"]["violations"][:5]
+    assert probe["no_dropped_events"], c
+    assert probe["segments_sum_ok"], c
+    return section
+
+
+# ---------------------------------------------------------------------------
 # Deterministic smoke-gate summary (CI benchmark-regression gate)
 # ---------------------------------------------------------------------------
 
@@ -817,7 +923,8 @@ GATE_SEED = 7
 GATE_TENANTS = 2
 
 
-def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED):
+def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED,
+                       trace_out=None):
     """Timing-free, machine-comparable summary for the CI regression gate.
 
     Every metric here is DETERMINISTIC for a given source tree: corpora
@@ -905,8 +1012,13 @@ def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED):
     # metrics above)
     chaos = run_chaos_section(chaos_seed, models, tokz)
 
+    # -- telemetry: counters-level bitwise inertness + trace-probe span /
+    # timeline invariants (separate backends; fixed seed, so its
+    # structural counts are exactly gateable whatever --chaos-seed is)
+    telemetry = run_telemetry_section(models, tokz, trace_out=trace_out)
+
     return {"static": static, "multi_tenant": multi_tenant, "paged": paged,
-            "capacity": capacity, "chaos": chaos,
+            "capacity": capacity, "chaos": chaos, "telemetry": telemetry,
             "constants": {"docs": GATE_DOCS, "batch": GATE_BATCH,
                           "seed": GATE_SEED, "tenants": GATE_TENANTS}}
 
@@ -930,6 +1042,11 @@ def main():
                          "the deterministic gate summary only")
     ap.add_argument("--chaos-seed", type=int, default=CHAOS_SEED,
                     help="seed for the fault-injection chaos section")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="write the telemetry trace probe's Chrome/"
+                         "Perfetto trace-event JSON here (the CI smoke "
+                         "uploads it as an artifact; open at "
+                         "https://ui.perfetto.dev)")
     ap.add_argument("--kv-dtype", choices=("f32", "bf16"), default="f32",
                     help="KV-cache storage dtype for every arena backend; "
                          "bf16 halves arena bytes on the f32 models while "
@@ -1054,7 +1171,8 @@ def main():
     # the parity A/B from the paged section is reused, not recomputed)
     print("== smoke gate (deterministic summary) ==", flush=True)
     report["smoke"] = smoke_gate_summary(parity=report["paged"]["parity"],
-                                         chaos_seed=args.chaos_seed)
+                                         chaos_seed=args.chaos_seed,
+                                         trace_out=args.trace_out)
     print(json.dumps(report["smoke"], indent=2), flush=True)
 
     if args.smoke:
@@ -1088,6 +1206,14 @@ def main():
         ch = report["smoke"]["chaos"]
         assert ch["all_docs_terminal"] and ch["accounting_exact"]
         assert ch["recovery_all_terminal"] and ch["recovery_restored_exact"]
+        # telemetry: default counters level is bitwise inert; trace-probe
+        # spans well-formed with exact per-launch segment accounting
+        # (run_telemetry_section asserts these too)
+        tel = report["smoke"]["telemetry"]
+        assert tel["counters_bitwise_inert"]
+        assert tel["trace_probe"]["spans_well_formed"]
+        assert tel["trace_probe"]["no_dropped_events"]
+        assert tel["trace_probe"]["segments_sum_ok"]
         gate = {"smoke": report["smoke"],
                 "backend": report["backend"],
                 "generated_by": "benchmarks/serve_engine.py --smoke"}

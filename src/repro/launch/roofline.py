@@ -35,6 +35,28 @@ HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
 
 
+def decode_launch_bytes(params_bytes: float, kv_bytes_per_step: float,
+                        steps: int = 1) -> float:
+    """Structural HBM-traffic estimate of a decode-only serving launch.
+
+    A decode step is memory-bound: each generated token streams the full
+    parameter set plus the batch's live KV prefix from HBM.  ``steps``
+    is the op-suffix length (one readout per suffix token).  Activations
+    and the O(B) token writes are negligible against these two terms.
+    """
+    return steps * (float(params_bytes) + float(kv_bytes_per_step))
+
+
+def bandwidth_utilization(bytes_moved: float, seconds: float,
+                          bw: float = HBM_BW) -> float:
+    """Fraction of the per-chip HBM roof a measured transfer achieved
+    (``serving/telemetry.py`` calls this per decode launch with the
+    ``block_until_ready`` device segment as ``seconds``)."""
+    if seconds <= 0.0:
+        return 0.0
+    return (float(bytes_moved) / float(seconds)) / bw
+
+
 def logical_param_counts(arch: str) -> Dict[str, float]:
     """(total, active) parameter counts from the UNPADDED architecture."""
     cfg = get_config(arch)

@@ -220,10 +220,16 @@ def main():
                     help="per-backend arena byte cap (eviction pressure)")
     ap.add_argument("--retire-after", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "measured serving pass (enables level='trace' "
+                         "telemetry; open at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     server = build_engine(args.batch, args.slot_budget, args.retire_after,
                           byte_budget=args.byte_budget)
+    if args.trace_out:
+        server.telemetry.level = "trace"
     cascades = tenant_cascades(args.tenants)
 
     # one corpus, sliced into per-tenant streams on a shared time axis
@@ -268,6 +274,18 @@ def main():
           f"{agg.evictions}; retired buckets {agg.retired_buckets}")
     print("arena bytes " + ", ".join(
         f"{m}={be.arena_nbytes():,}" for m, be in server.backends.items()))
+    tl = server.telemetry_snapshot()["timeline"]
+    print(f"timeline: sched {1e3 * tl['sched_s']:.1f} ms, host "
+          f"{1e3 * tl['host_s']:.1f} ms, dispatch "
+          f"{1e3 * tl['dispatch_s']:.1f} ms, device "
+          f"{1e3 * tl['device_s']:.1f} ms, idle wait "
+          f"{1e3 * tl['idle_wait_s']:.1f} ms; mean launch gap "
+          f"{tl['mean_launch_gap_ms']:.2f} ms")
+    if args.trace_out:
+        from ..serving.telemetry import write_chrome_trace
+        write_chrome_trace(server.telemetry, args.trace_out)
+        print(f"wrote Perfetto trace to {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

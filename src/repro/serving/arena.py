@@ -87,6 +87,8 @@ class BucketArena:
     prefix_len: Dict[int, int] = field(default_factory=dict)   # row -> P
     slot_prefix: Dict[int, int] = field(default_factory=dict)  # slot -> row
     slot_op: Dict[int, str] = field(default_factory=dict)      # slot -> op
+    growths: int = 0               # capacity doublings (telemetry counter:
+    #                                each one is a device-side realloc+copy)
 
     def __post_init__(self) -> None:
         if self.states is None:
@@ -123,6 +125,7 @@ class BucketArena:
         self.true_len = np.concatenate(
             [self.true_len, np.zeros(extra, np.int64)])
         self.capacity = new_cap
+        self.growths += 1
 
     def clear_slot(self, slot: int) -> None:
         """Reset metadata when a slot is re-issued to a new document.

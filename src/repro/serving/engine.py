@@ -173,6 +173,19 @@ from .arena import BucketArena
 from .scheduler import (FAILED, RESOLVED, TIMED_OUT, DocRequest, LaunchSpec,
                         RequestQueue, RetryPolicy, SchedulingPolicy,
                         ServeStats, SlotAllocator, StageConfig, fraction_len)
+from .telemetry import (EV_COW_COPY, EV_ESCALATE, EV_EVICT, EV_LAUNCH,
+                        EV_PREFIX_HIT, EV_QUARANTINE, EV_RETRY, EV_SUBMIT,
+                        LaunchRecord, Telemetry)
+
+_bw_utilization = None     # lazy launch/roofline import (avoids a cycle)
+
+
+def _bw_util(bytes_moved: float, seconds: float) -> float:
+    global _bw_utilization
+    if _bw_utilization is None:
+        from ..launch.roofline import bandwidth_utilization
+        _bw_utilization = bandwidth_utilization
+    return _bw_utilization(bytes_moved, seconds)
 
 
 class ServerStalledError(RuntimeError):
@@ -323,7 +336,16 @@ class LMBackend:
     _step: Optional[Any] = None      # jitted stage step (lazy)
     _prefix_step: Optional[Any] = None   # jitted prefix-layout step (lazy)
     pressure_retired: int = 0        # buckets freed mid-eviction (byte budget)
-    host_overhead_s: float = 0.0     # pack/assembly/dispatch wall-clock
+    # Derived view kept for compatibility: host assembly + async dispatch
+    # wall-clock, exactly the pre-telemetry lumped scalar.  The per-launch
+    # decomposition (host/dispatch/device) lives in ``last_timing`` and is
+    # folded into the server's launch timeline (serving/telemetry.py).
+    host_overhead_s: float = 0.0
+    telemetry: Optional[Any] = field(default=None, repr=False)  # Telemetry
+    last_timing: Optional[Dict[str, float]] = field(default=None, repr=False)
+    last_copy_bytes: int = field(default=0, repr=False)
+    last_hbm_bytes: Optional[float] = field(default=None, repr=False)
+    _params_nbytes: Optional[int] = field(default=None, repr=False)
 
     def reset(self) -> None:
         self._arenas.clear()
@@ -335,7 +357,40 @@ class LMBackend:
         self.cow_copies = 0
         self.pressure_retired = 0
         self.host_overhead_s = 0.0
+        self.last_timing = None
+        self.last_copy_bytes = 0
+        self.last_hbm_bytes = None
         # the jitted step closes over model only; its compile cache survives
+        # (telemetry handle survives too — the server owns its lifecycle)
+
+    def params_nbytes(self) -> int:
+        """Device bytes of the parameter set (memoized): the fixed term
+        of the decode-launch HBM-traffic estimate."""
+        if self._params_nbytes is None:
+            self._params_nbytes = int(sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree_util.tree_leaves(self.params)))
+        return self._params_nbytes
+
+    def _note_launch_traffic(self, bucket: int, batch: int, op_len: int,
+                             n_new: int, kv_true: np.ndarray) -> None:
+        """Per-launch structural traffic for the telemetry timeline:
+        copy/undo-log bytes (same model the paged benchmark gates) and,
+        for decode-only launches, the estimated HBM bytes the step
+        streams (params once per suffix token + the batch's live KV)."""
+        if self.uses_paged_kv():
+            self.last_copy_bytes = self.paged_copy_bytes_per_launch(
+                bucket, batch, op_len)
+        else:
+            self.last_copy_bytes = self.gather_bytes_per_launch(bucket,
+                                                                batch)
+        if n_new == 0:
+            s_alloc = self._s_alloc_for(bucket)
+            kv_bytes = (float(kv_true[:batch].sum())
+                        * self.slot_nbytes(bucket) / s_alloc)
+            self.last_hbm_bytes = op_len * (self.params_nbytes() + kv_bytes)
+        else:
+            self.last_hbm_bytes = None
 
     # ------------------------------------------------------------ slot admin
     def cached_len(self, doc_id: int) -> int:
@@ -845,6 +900,14 @@ class LMBackend:
                 arena.attach_prefix(slot, op_key)
                 fresh.append(slot)
         self.prefix_hits += len(fresh)
+        tm = self.telemetry
+        if tm is not None and tm.tracing and fresh:
+            fresh_set = set(fresh)
+            fresh_docs = [d for i, d in enumerate(ids)
+                          if slots[i] in fresh_set]
+            ts = time.perf_counter()
+            for d in fresh_docs:
+                tm.event(d, EV_PREFIX_HIT, ts, {"backend": self.name})
         if fresh and rem > 0:
             n = len(fresh)
             src = jnp.full((n,), row, jnp.int32)
@@ -854,6 +917,10 @@ class LMBackend:
             arena.states = self.model.put_kv_window(arena.states, dst,
                                                     start, rem, win)
             self.cow_copies += n
+            if tm is not None and tm.tracing:
+                ts = time.perf_counter()
+                for d in fresh_docs:
+                    tm.event(d, EV_COW_COPY, ts, {"backend": self.name})
 
         slots_arr = np.full(Bp, arena.scratch_slot, np.int32)
         slots_arr[:B] = slots
@@ -884,18 +951,26 @@ class LMBackend:
             kt = self._true_len(toks, fraction)
             kv_true[i] = kt
             last_tok[i] = toks[kt - 1]
-        self.host_overhead_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.host_overhead_s += t1 - t0
 
         if self._prefix_step is None:
             self._prefix_step = self._build_prefix_step()
-        t0 = time.perf_counter()
+        t2 = time.perf_counter()
         logits, new_states = self._prefix_step(
             self.params, arena.states, jnp.asarray(slots_arr),
             jnp.asarray(bt), jnp.asarray(new_tok), jnp.asarray(last_tok),
             jnp.asarray(kv_true), jnp.asarray(ext_true),
             c_len=eff_c, p_len=p_eff)
         arena.states = new_states
-        self.host_overhead_s += time.perf_counter() - t0   # async dispatch
+        t3 = time.perf_counter()
+        self.host_overhead_s += t3 - t2    # async dispatch
+        jax.block_until_ready((logits, new_states))
+        t4 = time.perf_counter()
+        self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
+                            "device": t4 - t3}
+        # undo log here is the width-1 readout window, not the op suffix
+        self._note_launch_traffic(bucket, B, 1, n_new, kv_true)
 
         if n_new > 0:
             for i, d in enumerate(ids):
@@ -1026,18 +1101,28 @@ class LMBackend:
                 cached_d[i] = min(int(arena.true_len[slot]),
                                   self._true_len(toks, fraction))
             kv_true[i] = self._true_len(toks, fraction)
-        self.host_overhead_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.host_overhead_s += t1 - t0
 
         if self._step is None:
             self._step = self._build_step()
-        t0 = time.perf_counter()
+        t2 = time.perf_counter()
         logits, new_states = self._step(
             self.params, arena.states, jnp.asarray(slots_arr),
             jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
             jnp.asarray(kv_true), jnp.asarray(ext_true),
             c_len=eff_c, op_len=op_len)
         arena.states = new_states
-        self.host_overhead_s += time.perf_counter() - t0   # async dispatch
+        t3 = time.perf_counter()
+        self.host_overhead_s += t3 - t2    # async dispatch
+        # device segment: wait out the step here (host-side sync only —
+        # the np.asarray readout below then costs nothing extra) so the
+        # timeline can split dispatch from device wall time
+        jax.block_until_ready((logits, new_states))
+        t4 = time.perf_counter()
+        self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
+                            "device": t4 - t3}
+        self._note_launch_traffic(bucket, B, op_len, n_new, kv_true)
 
         if n_new > 0:
             for i, d in enumerate(ids):
@@ -1244,6 +1329,12 @@ class CascadeServer:
     stall_limit: int = 256           # no-progress steps before stall error
     journal: Optional[RequestJournal] = None    # write-ahead request journal
     faults: Optional[Any] = None     # FaultInjector (set by install())
+    # Observability hub (serving/telemetry.py): metric registry + launch
+    # timeline on by default ("counters"); per-doc span traces opt in via
+    # level="trace".  Host-side only — the data plane stays bitwise
+    # identical at every level.
+    telemetry: Telemetry = field(default_factory=Telemetry, repr=False)
+    idle_wait_cap: float = 0.25      # max seconds one _idle_wait sleeps
     _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
         default_factory=dict, repr=False)
     # ---- serving state (shared queue; per-query partitions keyed by qid)
@@ -1280,6 +1371,8 @@ class CascadeServer:
     def __post_init__(self) -> None:
         if not self._tok:
             self._tok = {m: {} for m in self.backends}
+        for be in self.backends.values():   # share the hub with backends
+            be.telemetry = self.telemetry
 
     def _op_tokens(self, backend, op_id: str) -> np.ndarray:
         key = (backend.name, op_id)
@@ -1322,6 +1415,7 @@ class CascadeServer:
         self._arena_bytes_peak = 0
         self._prefix_hits = 0
         self._cow_copies = 0
+        self.telemetry.clear()          # traces reference dropped requests
         if self.journal is not None:    # dropped queries: journal restarts
             self.journal = RequestJournal()
 
@@ -1419,6 +1513,13 @@ class CascadeServer:
         self._ids[key] = rid
         self._pending[qid] += 1
         self._queue.push(req)
+        tm = self.telemetry
+        if tm.enabled:
+            tm.count("serve_docs_submitted_total", 1, query=qid)
+            if tm.tracing:
+                tm.register_doc(rid, qid, doc_id)
+                tm.event(rid, EV_SUBMIT, time.perf_counter(),
+                         {"stage": req.stage})
         return DocFuture(query_id=qid, doc_id=doc_id, _req=req, _server=self)
 
     def pending(self, query_id: Optional[int] = None) -> int:
@@ -1466,6 +1567,7 @@ class CascadeServer:
         # tokens each victim loses is exactly what its next launch must
         # re-prefill (the capacity metric the benchmark gates on)
         lost = {d: be.true_cached_len(d) for d in victims}
+        tm = self.telemetry
         for d in be.evict_for_room(launch.bucket, need, victims):
             req = self._requests[d]
             req.cached[be.name] = 0
@@ -1473,6 +1575,12 @@ class CascadeServer:
             st = self._query_stats[req.query_id]
             st.evictions += 1
             st.re_prefill_tokens += lost[d]
+            if tm.enabled:
+                tm.count("serve_evictions_total", 1, backend=launch.model)
+                if tm.tracing:
+                    tm.event(d, EV_EVICT, time.perf_counter(),
+                             {"backend": launch.model,
+                              "lost_tokens": lost[d], "reason": "budget"})
         retired = getattr(be, "pressure_retired", 0)
         if retired:
             be.pressure_retired = 0
@@ -1515,8 +1623,15 @@ class CascadeServer:
         never raises out of ``step``: its documents are re-enqueued solo
         with backoff (or finished FAILED/TIMED_OUT past their retry/
         deadline budgets) — see the module docstring's failure model.
+
+        Telemetry: each dispatched launch's wall time decomposes into
+        scheduler-pick / host-bookkeeping / dispatch / block_until_ready
+        segments (disjoint by construction — dispatch and device are
+        measured directly around the jitted step, host is the residual),
+        recorded as a ``LaunchRecord`` on the server's timeline.
         """
-        now = time.perf_counter()
+        tm = self.telemetry
+        t_begin = now = time.perf_counter()
         terminal: List[Tuple[int, int]] = []
         for req in self._queue.pop_expired(now):    # deadline beats backoff
             self._finish(req, TIMED_OUT, now, error="deadline exceeded")
@@ -1524,13 +1639,16 @@ class CascadeServer:
         self._reroute_sick()
         launch = self._queue.next_launch(self._stage_of, self.batch_size,
                                          policy=self.policy, now=now)
+        t_sched = time.perf_counter()
         if launch is None:
             self._note_progress(bool(terminal))
             return terminal
         be = self.backends[launch.model]
         launch = self._make_room(be, launch)
         ids = list(launch.doc_ids)
+        launch_idx = self._launches
         self._attempts += 1
+        be.last_timing = None        # a failed launch must not report stale
         try:
             p, c, new_d, cached_d = be.run_group(
                 ids, self._tok[launch.model], launch.bucket, launch.f_len,
@@ -1538,13 +1656,27 @@ class CascadeServer:
                 self._op_tokens(be, launch.op_id), self.n_classes,
                 op_id=launch.op_id)
         except Exception as exc:        # noqa: BLE001 — isolate the launch
-            self._on_launch_failure(launch, exc, now, terminal)
+            # fresh stamp: retry/terminal events must postdate any fault
+            # events the injector recorded DURING the failed launch (and
+            # the retry backoff anchors at the failure, not the dispatch)
+            self._on_launch_failure(launch, exc, time.perf_counter(),
+                                    terminal)
+            self._record_launch(launch, len(ids), t_begin, t_sched, be,
+                                ok=False, error=str(exc))
             self._note_progress(True)
             return terminal
         health = self._health.get(launch.model)
         if health is not None:
             health.record_success()
         now = time.perf_counter()
+        if tm.tracing:
+            sig = (launch.model, launch.op_id, launch.bucket,
+                   launch.cached_len, launch.f_len)
+            for i, rid in enumerate(ids):
+                tm.event(rid, EV_LAUNCH, now,
+                         {"sig": sig, "batch": len(ids),
+                          "stage": self._requests[rid].stage,
+                          "launch": launch_idx})
         touched: Dict[int, None] = {}           # queries in this launch
         for i, rid in enumerate(ids):
             req = self._requests[rid]
@@ -1570,9 +1702,17 @@ class CascadeServer:
             else:
                 req.stage += 1
                 req.solo = False        # rejoin cohort launches
+                if tm.tracing:
+                    tm.event(rid, EV_ESCALATE, now,
+                             {"to": req.stage, "reason": "threshold"})
                 self._sync_cached_for_stage(req)
                 self._queue.push(req)
         self._launches += 1
+        if tm.enabled:
+            tm.count("serve_tokens_total", int(new_d.sum()),
+                     backend=launch.model, kind="new")
+            tm.count("serve_tokens_total", int(cached_d.sum()),
+                     backend=launch.model, kind="cached")
         self._sync_shared_counters()
         for qid in touched:       # a query's ``batches`` = launches it rode
             self._query_stats[qid].batches += 1
@@ -1586,8 +1726,43 @@ class CascadeServer:
             for bname, bucket in self.faults.poll_arena_loss(
                     self._launches, self.backends):
                 self._apply_arena_loss(bname, bucket)
+        self._record_launch(launch, len(ids), t_begin, t_sched, be, ok=True)
         self._note_progress(True)
         return terminal
+
+    def _record_launch(self, launch: LaunchSpec, batch: int, t_begin: float,
+                       t_sched: float, be: Any, ok: bool,
+                       error: Optional[str] = None) -> None:
+        """Close out one launch's timeline record.  Dispatch and device
+        segments come from the backend's direct measurement around the
+        jitted step; scheduler-pick is the pre-launch boundary stamp; the
+        host segment is the residual, so the four sum to the step's wall
+        clock exactly."""
+        tm = self.telemetry
+        if not tm.enabled:
+            return
+        t_end = time.perf_counter()
+        timing = getattr(be, "last_timing", None) or {}
+        dispatch = timing.get("dispatch", 0.0)
+        device = timing.get("device", 0.0)
+        wall = t_end - t_begin
+        sched = t_sched - t_begin
+        host = max(wall - sched - dispatch - device, 0.0)
+        rec = LaunchRecord(
+            index=self._attempts - 1, ts_start=t_begin, model=launch.model,
+            op_id=launch.op_id, bucket=launch.bucket,
+            cached_len=launch.cached_len, f_len=launch.f_len, batch=batch,
+            width=_pad_width(batch), sched_s=sched, host_s=host,
+            dispatch_s=dispatch, device_s=device, wall_s=wall,
+            copy_bytes=getattr(be, "last_copy_bytes", 0) if ok else 0,
+            ok=ok, error=error)
+        if ok and rec.decode_only:
+            hbm = getattr(be, "last_hbm_bytes", None)
+            if hbm and device > 0.0:
+                rec.hbm_bytes = hbm
+                rec.bw_util = _bw_util(hbm, device)
+        tm.record_launch(rec)
+        tm.set_gauge("serve_queue_depth", len(self._queue))
 
     def _sync_cached_for_stage(self, req: DocRequest) -> None:
         """Prefix-sharing invalidation on op switch.
@@ -1621,9 +1796,23 @@ class CascadeServer:
                                 for b in self.backends.values())
         self._cow_copies = sum(getattr(b, "cow_copies", 0)
                                for b in self.backends.values())
-        nbytes = sum(b.arena_nbytes() for b in self.backends.values()
-                     if hasattr(b, "arena_nbytes"))
+        tm = self.telemetry
+        nbytes = 0
+        for name, b in self.backends.items():
+            if not hasattr(b, "arena_nbytes"):
+                continue
+            bn = b.arena_nbytes()
+            nbytes += bn
+            if tm.enabled:
+                tm.set_gauge("serve_arena_bytes", bn, backend=name)
+                tm.set_gauge("serve_arena_growths",
+                             sum(ar.growths
+                                 for ar in getattr(b, "_arenas", {}
+                                                   ).values()),
+                             backend=name)
         self._arena_bytes_peak = max(self._arena_bytes_peak, nbytes)
+        if tm.enabled:
+            tm.set_gauge("serve_arena_bytes_peak", self._arena_bytes_peak)
         for st in self._query_stats.values():
             st.prefix_hits = self._prefix_hits
             st.cow_copies = self._cow_copies
@@ -1659,6 +1848,17 @@ class CascadeServer:
         self._pending[qid] -= 1
         if self.journal is not None:
             self.journal.record_resolution(req)
+        tm = self.telemetry
+        if tm.enabled:
+            tm.count("serve_docs_terminal_total", 1, query=qid,
+                     status=status)
+            if status == RESOLVED:
+                tm.observe("serve_doc_latency_seconds",
+                           max(now - req.arrival_ts, 0.0), query=qid)
+            if tm.tracing:       # terminal kinds == scheduler status strings
+                attrs = ({"stage": exit_stage} if status == RESOLVED
+                         else {"error": error})
+                tm.event(req.doc_id, status, now, attrs)
 
     def _on_launch_failure(self, launch: LaunchSpec, exc: Exception,
                            now: float,
@@ -1669,6 +1869,9 @@ class CascadeServer:
         Backends commit arena state only after a successful step, so
         there is no partial state to unwind.  Feeds the breaker."""
         self._failed_launches += 1
+        tm = self.telemetry
+        if tm.enabled:
+            tm.count("serve_launch_failures_total", 1, backend=launch.model)
         health = self._health.get(launch.model)
         if health is None:
             health = BackendHealth(threshold=self.breaker_threshold,
@@ -1685,6 +1888,8 @@ class CascadeServer:
             stats = self._query_stats[req.query_id]
             req.retries += 1
             stats.retries += 1
+            if tm.enabled:
+                tm.count("serve_retries_total", 1, query=req.query_id)
             if req.deadline is not None and req.deadline <= now:
                 self._finish(req, TIMED_OUT, now, error="deadline exceeded")
                 terminal.append((req.query_id, req.ext_id))
@@ -1695,8 +1900,12 @@ class CascadeServer:
                 terminal.append((req.query_id, req.ext_id))
             else:
                 req.solo = True
-                req.not_before = now + self.retry.backoff(req.retries)
+                backoff = self.retry.backoff(req.retries)
+                req.not_before = now + backoff
                 self._queue.push(req)
+                if tm.tracing:
+                    tm.event(rid, EV_RETRY, now,
+                             {"retries": req.retries, "backoff_s": backoff})
 
     def _quarantine(self, req: DocRequest, stats: ServeStats, now: float,
                     terminal: List[Tuple[int, int]]) -> None:
@@ -1707,6 +1916,12 @@ class CascadeServer:
         document from scratch); non-finite at the FINAL stage fails."""
         stats.quarantines += 1
         req.quarantines += 1
+        tm = self.telemetry
+        if tm.enabled:
+            tm.count("serve_quarantines_total", 1, query=req.query_id)
+            if tm.tracing:
+                tm.event(req.doc_id, EV_QUARANTINE, now,
+                         {"count": req.quarantines})
         final = len(self._handles[req.query_id].stages) - 1
         if req.quarantines < 2:
             req.solo = True             # isolate the retry
@@ -1714,6 +1929,9 @@ class CascadeServer:
         elif req.stage < final:
             req.stage = final
             req.solo = True
+            if tm.tracing:
+                tm.event(req.doc_id, EV_ESCALATE, now,
+                         {"to": final, "reason": "quarantine"})
             self._sync_cached_for_stage(req)
             self._queue.push(req)
         else:
@@ -1741,6 +1959,10 @@ class CascadeServer:
                 advanced = True
             if advanced:
                 self._sync_cached_for_stage(req)
+                if self.telemetry.tracing:
+                    self.telemetry.event(
+                        req.doc_id, EV_ESCALATE, time.perf_counter(),
+                        {"to": req.stage, "reason": "breaker"})
 
     def _apply_arena_loss(self, bname: str, bucket: int) -> None:
         """Replay the eviction path for every live document of a lost
@@ -1748,6 +1970,9 @@ class CascadeServer:
         next launch re-prefills over a recycled slot, exactly like a
         budget eviction.  In-flight results already billed are kept."""
         be = self.backends[bname]
+        tm = self.telemetry
+        if tm.enabled:
+            tm.count("serve_arena_losses_total", 1, backend=bname)
         for d in list(be.live_docs()):
             if be._doc_slot[d][0] != bucket:
                 continue
@@ -1759,6 +1984,10 @@ class CascadeServer:
                 st = self._query_stats[req.query_id]
                 st.recovered_docs += 1
                 st.re_prefill_tokens += lost
+                if tm.tracing:
+                    tm.event(d, EV_EVICT, time.perf_counter(),
+                             {"backend": bname, "lost_tokens": lost,
+                              "reason": "arena_loss"})
 
     def _note_progress(self, progressed: bool) -> None:
         """Liveness watchdog: ``stall_limit`` consecutive no-progress
@@ -1781,11 +2010,20 @@ class CascadeServer:
                 f"{stuck}", stuck)
 
     def _idle_wait(self) -> None:
-        """Sleep out the shortest pending retry backoff (bounded) so
-        drain loops do not busy-spin while every request is backing off."""
+        """Sleep out the shortest pending retry backoff so drain loops do
+        not busy-spin while every request is backing off.
+
+        Sleeps the ACTUAL eligible interval (capped at ``idle_wait_cap``)
+        instead of a fixed 50 ms slice — a 0.5 s backoff used to cost ten
+        wakeups; now it costs at most ``ceil(0.5 / cap)``.  The measured
+        sleep time accumulates into the launch timeline
+        (``telemetry.idle_wait_s``) so drain-side idle waits are visible
+        next to sched/host/dispatch/device in ``telemetry_snapshot()``."""
         wait = self._queue.next_eligible_in()
         if wait is not None and wait > 0 and math.isfinite(wait):
-            time.sleep(min(wait, 0.05))
+            t0 = time.perf_counter()
+            time.sleep(min(wait, self.idle_wait_cap))
+            self.telemetry.add_idle_wait(time.perf_counter() - t0)
 
     def ledger(self) -> List[Tuple[int, int, int, float]]:
         """Per-document billing ledger: ``(launch, query_id, request_id,
@@ -1841,21 +2079,16 @@ class CascadeServer:
 
     @staticmethod
     def _merge_stats(dst: ServeStats, src: ServeStats) -> None:
-        """Fold one query's stage vectors/evictions/latencies/fault
-        counters into ``dst`` (launch and breaker counters are NOT
-        summed — launches and backends are shared)."""
-        for s in range(len(src.stage_docs)):
-            dst.record(s, src.stage_docs[s], src.stage_new_tokens[s],
-                       src.stage_cached_tokens[s], src.stage_cost[s])
-        dst.evictions += src.evictions
-        dst.latencies.extend(src.latencies)
-        dst.retries += src.retries
-        dst.quarantines += src.quarantines
-        dst.timeouts += src.timeouts
-        dst.failures += src.failures
-        dst.recovered_docs += src.recovered_docs
-        dst.re_prefill_tokens += src.re_prefill_tokens
-        dst.arena_bytes_peak = max(dst.arena_bytes_peak, src.arena_bytes_peak)
+        """Fold one query's stats into ``dst``.
+
+        Delegates to ``ServeStats.merge_from``, which walks
+        ``dataclasses.fields`` and applies each field's declared merge
+        strategy — a new counter added to ``ServeStats`` is merged by
+        default ("sum") instead of silently dropping here.  Launch and
+        breaker counters are declared "shared" (launches and backends
+        are shared across queries) and skipped; ``stats()`` overwrites
+        them from server-global state."""
+        dst.merge_from(src)
 
     def occupancy(self) -> float:
         """Mean documents per launch across every query the server has
@@ -1865,6 +2098,28 @@ class CascadeServer:
         docs = sum(sum(st.stage_docs)
                    for st in [self._departed, *self._query_stats.values()])
         return docs / self._launches if self._launches else 0.0
+
+    def telemetry_snapshot(self) -> Dict[str, Any]:
+        """Structured observability snapshot: the telemetry subsystem's
+        counters + launch timeline (``Telemetry.snapshot``) plus a
+        ``server`` section of scheduler-level state and — at
+        ``level="trace"`` — a ``spans`` section from
+        ``Telemetry.validate_spans`` (terminal events required only once
+        the queue is idle; in-flight documents legitimately have open
+        spans).  Embedded by ``benchmarks/serve_engine.py --smoke`` so CI
+        gates span completeness and structural event counts."""
+        snap = self.telemetry.snapshot()
+        snap["server"] = {
+            "launches": self._launches,
+            "attempts": self._attempts,
+            "failed_launches": self._failed_launches,
+            "queue_depth": len(self._queue),
+            "occupancy": self.occupancy(),
+        }
+        if self.telemetry.tracing:
+            snap["spans"] = self.telemetry.validate_spans(
+                require_terminal=not self.pending())
+        return snap
 
     def result(self, query_id: int) -> EngineResult:
         """One query's terminal documents (keyed by the caller's doc ids),
@@ -1957,6 +2212,20 @@ class CascadeServer:
         self._query_cost[qid] += res["cost"]
         self._ledger.append((-1, qid, rid, res["cost"]))
         self._fresh[qid].append(rid)
+        tm = self.telemetry
+        tm.count("serve_docs_restored_total", 1, query=qid)
+        if tm.tracing:
+            # Restored documents get a degenerate span (submit + terminal
+            # at the same stamp): span validation sees a complete span
+            # without pretending to know the original timings.
+            ts = req.arrival_ts
+            tm.register_doc(rid, qid, sub["ext_id"])
+            tm.event(rid, EV_SUBMIT, ts,
+                     {"stage": sub["stage"], "restored": True})
+            attrs = ({"stage": req.exit_stage} if req.status == RESOLVED
+                     else {"error": req.error})
+            attrs["restored"] = True
+            tm.event(rid, req.status, ts, attrs)
         if self.journal is not None:
             self.journal.record_submit(
                 qid, sub["ext_id"], sub["text"], sub["arrival"],

@@ -51,6 +51,8 @@ import time
 
 import numpy as np
 
+from .telemetry import EV_FAULT
+
 
 class InjectedFault(RuntimeError):
     """Base class for faults raised by the injection harness."""
@@ -174,12 +176,38 @@ class FaultyBackend:
     def run_group(self, *args, **kwargs):
         inj: FaultInjector = object.__getattribute__(self, "_injector")
         inner = object.__getattribute__(self, "_inner")
+        # The inner backend shares the server's telemetry handle; injected
+        # faults land in the owning documents' span traces (EV_FAULT) so a
+        # Perfetto view shows the injection next to the retry/quarantine
+        # it provokes.  RNG draw order is untouched: telemetry reads the
+        # schedule, it never draws.
+        tm = getattr(inner, "telemetry", None)
+        ids = args[0] if args else kwargs.get("ids", [])
         fail, corrupt, spike = inj.draw()
         if spike and inj.plan.spike_s > 0.0:
             inj.counts["latency_spikes"] += 1
+            if tm is not None and tm.enabled:
+                tm.count("serve_injected_faults_total", 1,
+                         kind="latency_spike", backend=inner.name)
+                if tm.tracing:
+                    ts = time.perf_counter()
+                    for d in ids:
+                        tm.event(d, EV_FAULT, ts,
+                                 {"kind": "latency_spike",
+                                  "backend": inner.name,
+                                  "spike_s": inj.plan.spike_s})
             time.sleep(inj.plan.spike_s)
         if fail:
             inj.counts["launch_failures"] += 1
+            if tm is not None and tm.enabled:
+                tm.count("serve_injected_faults_total", 1,
+                         kind="launch_failure", backend=inner.name)
+                if tm.tracing:
+                    ts = time.perf_counter()
+                    for d in ids:
+                        tm.event(d, EV_FAULT, ts,
+                                 {"kind": "launch_failure",
+                                  "backend": inner.name})
             raise InjectedLaunchFailure(
                 f"injected launch failure (call {inj.calls}, "
                 f"model={inner.name})")
@@ -187,5 +215,12 @@ class FaultyBackend:
         if corrupt:
             inj.counts["nan_confidences"] += 1
             conf = np.array(conf, dtype=np.float64, copy=True)
-            conf[inj.pick_victim(conf.shape[0])] = np.nan
+            victim = inj.pick_victim(conf.shape[0])
+            conf[victim] = np.nan
+            if tm is not None and tm.enabled:
+                tm.count("serve_injected_faults_total", 1,
+                         kind="nan_conf", backend=inner.name)
+                if tm.tracing and victim < len(ids):
+                    tm.event(ids[victim], EV_FAULT, time.perf_counter(),
+                             {"kind": "nan_conf", "backend": inner.name})
         return pred, conf, new_d, cached_d

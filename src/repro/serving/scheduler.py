@@ -70,10 +70,11 @@ A straggler policy can migrate queued work between serving shards
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
 import numpy as np
@@ -501,36 +502,86 @@ def pack_stage_batches(
 # Serving statistics ($-aware)
 # ---------------------------------------------------------------------------
 
+# ServeStats aggregation strategies, declared per-field via dataclass
+# metadata so ``merge_from`` can iterate ``dataclasses.fields`` instead of
+# a hand-maintained list (a new counter defaults to "sum" and can never
+# silently drop out of ``server.stats()`` aggregation):
+#   sum     additive per-query counter
+#   max     high-water mark
+#   concat  per-document sample list
+#   stage   per-stage vectors, folded jointly through ``record``
+#   shared  mirror of a server-wide substrate counter (launches, breaker
+#           trips, retired buckets, prefix memo hits): summing would
+#           double-count, so merge skips it and the server's aggregate
+#           overwrites it from its own global state
+MERGE_STRATEGIES = ("sum", "max", "concat", "stage", "shared")
+
+
+def _stat(merge: str, **kw: Any) -> Any:
+    assert merge in MERGE_STRATEGIES
+    return field(metadata={"merge": merge}, **kw)
+
+
 @dataclass
 class ServeStats:
-    stage_docs: List[int] = field(default_factory=list)
-    stage_new_tokens: List[int] = field(default_factory=list)
-    stage_cached_tokens: List[int] = field(default_factory=list)
-    stage_cost: List[float] = field(default_factory=list)
-    batches: int = 0
-    evictions: int = 0                 # slots preempted under budget pressure
-    retired_buckets: int = 0           # idle arenas freed (memory control)
-    latencies: List[float] = field(default_factory=list)   # submit->resolve s
+    stage_docs: List[int] = _stat("stage", default_factory=list)
+    stage_new_tokens: List[int] = _stat("stage", default_factory=list)
+    stage_cached_tokens: List[int] = _stat("stage", default_factory=list)
+    stage_cost: List[float] = _stat("stage", default_factory=list)
+    batches: int = _stat("shared", default=0)   # launches this query rode
+    evictions: int = _stat("sum", default=0)    # slots preempted under budget
+    retired_buckets: int = _stat("shared", default=0)  # idle arenas freed
+    latencies: List[float] = _stat("concat",
+                                   default_factory=list)  # submit->resolve s
     # fault-tolerance counters (see the module docstring's failure model)
-    retries: int = 0                   # doc re-enqueues after failed launches
-    quarantines: int = 0               # non-finite confidences caught
-    timeouts: int = 0                  # docs resolved TIMED_OUT
-    failures: int = 0                  # docs resolved FAILED
-    breaker_trips: int = 0             # backend circuit-breaker openings
-    recovered_docs: int = 0            # arena-loss replays + journal resubmits
+    retries: int = _stat("sum", default=0)      # re-enqueues after failures
+    quarantines: int = _stat("sum", default=0)  # non-finite confs caught
+    timeouts: int = _stat("sum", default=0)     # docs resolved TIMED_OUT
+    failures: int = _stat("sum", default=0)     # docs resolved FAILED
+    breaker_trips: int = _stat("shared", default=0)  # circuit-breaker opens
+    recovered_docs: int = _stat("sum", default=0)    # arena-loss replays +
+    #                                                  journal resubmits
     # memory/prefix-sharing counters (PR-7 capacity accounting)
-    arena_bytes_peak: int = 0          # max device bytes across arenas seen
-    re_prefill_tokens: int = 0         # true cached tokens lost to eviction
-    #                                    or arena loss (work to re-prefill)
-    prefix_hits: int = 0               # docs attached to an existing shared
-    #                                    op-prefix row (op prefill amortized)
-    cow_copies: int = 0                # copy-on-write partial-block copies
-    #                                    (prefix remainder -> private row)
+    arena_bytes_peak: int = _stat("max", default=0)  # max arena device bytes
+    re_prefill_tokens: int = _stat("sum", default=0)  # true cached tokens
+    #                                    lost to eviction or arena loss
+    prefix_hits: int = _stat("shared", default=0)  # docs attached to an
+    #                                    existing shared op-prefix row
+    cow_copies: int = _stat("shared", default=0)   # copy-on-write partial-
+    #                                    block copies (prefix -> private)
 
     def latency_quantile(self, q: float) -> float:
         if not self.latencies:
             return 0.0
         return float(np.quantile(np.asarray(self.latencies), q))
+
+    def merge_from(self, src: "ServeStats") -> None:
+        """Fold ``src`` into ``self``, dispatching on each field's
+        declared merge strategy (see ``MERGE_STRATEGIES`` above).  The
+        per-stage vectors are folded jointly through ``record`` once."""
+        staged = False
+        for f in dataclasses.fields(self):
+            kind = f.metadata.get("merge", "sum")
+            if kind == "stage":
+                if not staged:
+                    for s in range(len(src.stage_docs)):
+                        self.record(s, src.stage_docs[s],
+                                    src.stage_new_tokens[s],
+                                    src.stage_cached_tokens[s],
+                                    src.stage_cost[s])
+                    staged = True
+            elif kind == "sum":
+                setattr(self, f.name,
+                        getattr(self, f.name) + getattr(src, f.name))
+            elif kind == "max":
+                setattr(self, f.name,
+                        max(getattr(self, f.name), getattr(src, f.name)))
+            elif kind == "concat":
+                getattr(self, f.name).extend(getattr(src, f.name))
+            else:
+                assert kind == "shared", \
+                    f"unknown merge strategy {kind!r} on " \
+                    f"ServeStats.{f.name}"
 
     def record(self, stage: int, docs: int, new_tokens: int,
                cached_tokens: int, cost: float = 0.0) -> None:
