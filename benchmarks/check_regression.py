@@ -138,9 +138,30 @@ def _rel_ok(fresh: float, base: float, tol: float) -> bool:
                                                         1e-12)
 
 
+def section_diff(fresh: dict, base: dict) -> list:
+    """Top-level section drift between the fresh summary and the
+    baseline, reported in BOTH directions.  A section present in the
+    baseline but absent from the fresh run means the benchmark silently
+    stopped producing it (the per-metric loop would only say 'missing
+    from fresh' for gated paths); a fresh-only section means the
+    baseline predates it and must be regenerated."""
+    violations = []
+    missing = sorted(set(base) - set(fresh))
+    extra = sorted(set(fresh) - set(base))
+    if missing:
+        violations.append(
+            f"sections missing from fresh summary: {missing} "
+            f"(baseline has {sorted(base)})")
+    if extra:
+        violations.append(
+            f"sections missing from baseline: {extra} "
+            f"(regenerate BENCH_serve_engine.json)")
+    return violations
+
+
 def compare(fresh: dict, base: dict) -> list:
     """Return the list of violations (empty = gate passes)."""
-    violations = []
+    violations = section_diff(fresh, base)
     for path, (kind, tol) in TOLERANCES.items():
         try:
             f = _get(fresh, path)
@@ -182,6 +203,35 @@ def compare(fresh: dict, base: dict) -> list:
     return violations
 
 
+def _load_section(path: str, which: str) -> dict:
+    """Load the gated ``"smoke"`` section of ``path`` or exit 2 with a
+    diagnostic naming the file, the missing piece, and the keys that ARE
+    there — a truncated/renamed summary must not surface as a KeyError."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"regression gate: {which} file not found: {path}")
+        raise SystemExit(2)
+    except json.JSONDecodeError as e:
+        print(f"regression gate: {which} {path} is not valid JSON: {e}")
+        raise SystemExit(2)
+    if not isinstance(doc, dict) or "smoke" not in doc:
+        keys = sorted(doc) if isinstance(doc, dict) else type(doc).__name__
+        fix = ("re-run benchmarks/serve_engine.py --smoke"
+               if which == "fresh summary"
+               else "regenerate it with benchmarks/serve_engine.py")
+        print(f"regression gate: {which} {path} has no 'smoke' section "
+              f"(top-level keys: {keys}); {fix}")
+        raise SystemExit(2)
+    smoke = doc["smoke"]
+    if not isinstance(smoke, dict):
+        print(f"regression gate: {which} {path} 'smoke' section is "
+              f"{type(smoke).__name__}, expected an object")
+        raise SystemExit(2)
+    return smoke
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("summary", help="fresh --smoke summary JSON")
@@ -189,10 +239,8 @@ def main() -> int:
                     help="committed benchmark JSON holding the baseline "
                          "'smoke' section")
     args = ap.parse_args()
-    with open(args.summary) as f:
-        fresh = json.load(f)["smoke"]
-    with open(args.baseline) as f:
-        base = json.load(f)["smoke"]
+    fresh = _load_section(args.summary, "fresh summary")
+    base = _load_section(args.baseline, "baseline")
     violations = compare(fresh, base)
     if violations:
         print(f"REGRESSION GATE FAILED ({len(violations)} violation(s) "

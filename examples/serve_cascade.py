@@ -31,7 +31,14 @@ Pipeline (mirrors Figure 2 of the paper, end to end on CPU):
      prefix prefills once per (backend, op, bucket) into a pinned shared
      arena row aliased by every document's block table, and the KV
      stores at half an f32 row (``kv_dtype='bfloat16'``) — more live
-     documents per byte of HBM, same billing contract.
+     documents per byte of HBM, same billing contract;
+  8. record a Perfetto trace of a two-tenant chaos run (span events,
+     launch timeline, metric registry);
+  9. gate the tree with the RSA linter (``python -m repro.analysis``)
+     and replay the chaos feed under the runtime ARENA SANITIZER
+     (``ARENA_SANITIZE=1`` / ``LMBackend.sanitize=True``): every
+     launch's read/write row sets are bracketed, so slot-aliasing
+     races raise ``ArenaRaceError`` instead of corrupting KV.
 
 The data plane underneath is PAGED on Pallas runtimes: each document owns
 one slot row of a persistent per-bucket KV arena, the per-launch slot ids
@@ -344,6 +351,43 @@ def main():
     print(f"   wrote {trace_path} — open at https://ui.perfetto.dev "
           f"(one track per backend with launch+segment slices, one per "
           f"query with per-document span slices)")
+
+    print("9. static analysis + sanitized chaos drain")
+    # The repo-specific AST linter (rules RSA001-RSA005: jit signature
+    # hygiene, Pallas conventions, donation safety, merge metadata,
+    # wall-clock/RNG in jit — catalogue in ``repro.analysis.__doc__``)
+    # gates the tree against the committed suppression baseline, and the
+    # runtime arena sanitizer replays the chaos feed with every launch's
+    # read/write row sets bracketed: slot-aliasing races, pinned-prefix
+    # writes outside COW, and use-after-release raise ``ArenaRaceError``
+    # instead of corrupting KV silently.  The sanitizer is host-side
+    # shadow state only — preds/confs/$ are bitwise those of step 6.
+    from repro.analysis import lint as rsa_lint
+    rc = rsa_lint.main(["src/repro"])
+    assert rc == 0, "linter found new violations (see output above)"
+    for be in backends.values():
+        be.reset()
+        be.sanitize = True          # or ARENA_SANITIZE=1 in the env
+        be._sanitizer = None
+    sane = CascadeServer(backends, OPS, n_classes=2, batch_size=4,
+                         retry=RetryPolicy(max_retries=2,
+                                           backoff_base=0.0))
+    FaultInjector(FaultPlan(seed=5, launch_failure_p=0.25, nan_p=0.2,
+                            arena_loss_at=3)).install(sane)
+    s_main = sane.register(cascade)
+    for k, d in enumerate(feed):
+        s_main.submit(d, test_docs[d], arrival=float(k))
+    sane.drain()
+    sans = [b._sanitizer for b in backends.values()
+            if b._sanitizer is not None]
+    checks = sum(s.checks for s in sans)
+    assert checks > 0 and sum(s.violations for s in sans) == 0
+    print(f"   linter clean vs baseline; sanitized chaos drain: "
+          f"{checks} launch brackets, "
+          f"{sum(s.rows_checked for s in sans)} row memberships, "
+          f"0 violations")
+    for be in backends.values():
+        be.sanitize = None          # leave the demo backends env-driven
     print(f"done in {time.time() - t0:.0f}s")
 
 

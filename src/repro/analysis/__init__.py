@@ -1,0 +1,97 @@
+"""Serving-plane static analysis + runtime arena sanitizer.
+
+Two halves, one correctness discipline: the paper guarantees cascade
+*accuracy* within an error budget; this subsystem guarantees the data
+plane that serves the cascades — slot arenas, block tables, donated
+buffers, scalar-prefetch kernels — by making invariant violations CI
+failures instead of silent wrong answers.
+
+Static pass (``python -m repro.analysis``)
+==========================================
+AST linter over ``src/repro/`` with repo-specific rules, gated in CI
+against the committed suppression baseline ``analysis/baseline.json``
+(new findings and stale suppressions both fail).  Suppress a finding
+either with a baseline entry (one-line ``reason`` required) or inline
+with ``# lint: disable=RSA00X`` on the flagged line.
+
+Rule catalogue
+--------------
+**RSA001 — jit-signature hygiene.**  Jitted stage steps must not take
+mutable default arguments or close over mutable enclosing-scope state:
+the capture's identity freezes into the trace (silent recompiles,
+stale numerics).  Minimal violation::
+
+    def build():
+        memo = []                      # mutable, mutated below
+        def step(x):
+            return x + len(memo)       # RSA001: closure over memo
+        memo.append(1)
+        return jax.jit(step)
+
+Fix: thread values as traced args or hashable ``static_argnames``;
+capture only immutable handles (``model = self.model``).
+
+**RSA002 — Pallas kernel conventions.**  (a) BlockSpec index maps must
+be pure index arithmetic — no ``jnp.``/``jax.lax.`` calls; (b) under
+``PrefetchScalarGridSpec(num_scalar_prefetch=N)`` the first ``N``
+kernel parameters are SMEM scalar refs — array refs (``q_ref`` etc.)
+must come after; (c) grid dims must be derived (``S // block_kv``),
+not integer literals.  Minimal violations::
+
+    pl.BlockSpec((1, b), lambda i, j: (jnp.mod(i, 4), j))   # RSA002a
+    def kernel(q_ref, slots_ref, o_ref): ...                # RSA002b (N=1)
+    pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=1,
+                                 grid=(4, 8))               # RSA002c
+
+**RSA003 — donation safety.**  An argument donated through
+``jax.jit(..., donate_argnums=...)`` or aliased through Pallas
+``input_output_aliases`` is INVALID after the call; reading the same
+expression before rebinding it observes freed memory.  Minimal
+violation::
+
+    step = jax.jit(f, donate_argnums=(0,))
+    out = step(state, x)
+    debug = state.sum()        # RSA003: donated `state` read after call
+    state = out                # (rebinding first would be the fix)
+
+**RSA004 — merge metadata on stats dataclasses.**  Any ``@dataclass``
+defining ``merge_from`` (or named ``*Stats``) must declare a merge
+strategy on every field (``scheduler._stat(...)`` or
+``field(metadata={"merge": ...})``), else multi-tenant aggregation
+silently mis-merges the new field.  Minimal violation::
+
+    @dataclass
+    class ServeStats:
+        launches: int = 0      # RSA004: no merge strategy
+        def merge_from(self, src): ...
+
+**RSA005 — no wall-clock/RNG in jitted or kernel bodies.**
+``time.*``, ``datetime.*``, ``np.random.*``, ``random.*`` inside a
+jitted function or Pallas kernel evaluate once at trace time and
+freeze into the compiled step.  Minimal violation::
+
+    @jax.jit
+    def step(x):
+        return x * np.random.rand()    # RSA005: frozen at trace time
+
+(``jax.random`` with threaded keys is the sanctioned source.)
+
+Runtime half (``analysis/sanitizer.py``)
+========================================
+:class:`~repro.analysis.sanitizer.ArenaSanitizer` — per-row ownership
+epochs over the KV arenas, active under ``ARENA_SANITIZE=1`` (or
+``LMBackend.sanitize=True``).  Launches register read/write row sets;
+overlapping in-flight writes, writes to pinned prefix rows outside the
+COW path, and use-after-release raise
+:class:`~repro.analysis.sanitizer.ArenaRaceError` naming rows, launch
+signatures, and owning doc/query ids.  This is the gate ROADMAP item
+2's overlapped dispatch must keep green before ``block_until_ready``
+can be deferred.  The sanitizer is bitwise-inert: no device arrays, no
+RNG, and its ``serve_sanitizer_checks_total`` counters live on a
+private registry so the telemetry hub's gated series are unchanged.
+"""
+from __future__ import annotations
+
+from .sanitizer import ArenaRaceError, ArenaSanitizer, env_enabled
+
+__all__ = ["ArenaRaceError", "ArenaSanitizer", "env_enabled"]

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — run the RSA linter (see lint.py)."""
+import sys
+
+from .lint import main
+
+if __name__ == "__main__":
+    sys.exit(main())

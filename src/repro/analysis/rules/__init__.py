@@ -1,0 +1,22 @@
+"""Rule registry for the RSA linter (see ``repro.analysis.__doc__`` for
+the full catalogue with violating examples).
+
+A rule is a module exposing ``RULE_ID``, ``SUMMARY``, and
+``check(tree, lines, path) -> Iterator[(line, col, message)]``.  The
+driver (:mod:`repro.analysis.lint`) owns baseline matching and inline
+suppression; rules just report.
+"""
+from __future__ import annotations
+
+from . import (rsa001_jit_signature, rsa002_pallas_conventions,
+               rsa003_donation, rsa004_merge_metadata, rsa005_wallclock)
+
+ALL_RULES = (
+    rsa001_jit_signature,
+    rsa002_pallas_conventions,
+    rsa003_donation,
+    rsa004_merge_metadata,
+    rsa005_wallclock,
+)
+
+RULE_IDS = tuple(r.RULE_ID for r in ALL_RULES)

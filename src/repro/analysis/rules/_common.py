@@ -1,0 +1,203 @@
+"""Shared AST helpers for the RSA rules.
+
+Everything here is pure-AST (no imports of the linted code): rules must
+run on any checkout without executing it.  Resolution is heuristic by
+design — a name passed to ``jax.jit`` is looked up among the function
+definitions of the same module — and rules should prefer false
+negatives over false positives (the baseline absorbs judgement calls,
+it should not absorb noise).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``jax.lax.dot_general`` for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def annotate_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._rsa_parent = node            # type: ignore[attr-defined]
+
+
+def enclosing_functions(node: ast.AST) -> List[ast.AST]:
+    """Enclosing FunctionDefs, innermost first (requires
+    ``annotate_parents``)."""
+    out = []
+    cur = getattr(node, "_rsa_parent", None)
+    while cur is not None:
+        if isinstance(cur, FuncDef):
+            out.append(cur)
+        cur = getattr(cur, "_rsa_parent", None)
+    return out
+
+
+def defs_by_name(tree: ast.AST) -> Dict[str, List[ast.AST]]:
+    out: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def _is_jit_name(name: Optional[str]) -> bool:
+    return name in ("jax.jit", "jit", "pjit", "jax.pjit")
+
+
+def jit_target(call: ast.Call) -> Optional[ast.AST]:
+    """The function expression a ``jax.jit(...)`` call wraps, or None."""
+    if _is_jit_name(dotted(call.func)) and call.args:
+        return call.args[0]
+    return None
+
+
+def is_partial_of_jit(call: ast.Call) -> bool:
+    name = dotted(call.func)
+    return (name in ("functools.partial", "partial") and call.args
+            and _is_jit_name(dotted(call.args[0])))
+
+
+def scoped_defs(scope: ast.AST) -> Dict[str, ast.AST]:
+    """FunctionDefs bound as bare names in ``scope``'s namespace: direct
+    children, descending through control flow but NOT into nested
+    function/class bodies (those bind in inner/attribute namespaces)."""
+    out: Dict[str, ast.AST] = {}
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, FuncDef):
+                out[child.name] = child
+            elif isinstance(child, (ast.ClassDef, ast.Lambda)):
+                continue
+            else:
+                walk(child)
+
+    walk(scope)
+    return out
+
+
+def resolve_local(name_node: ast.AST, at: ast.AST,
+                  _depth: int = 0) -> List[ast.AST]:
+    """Resolve a function expression to FunctionDefs using LEXICAL scope
+    at ``at`` (requires ``annotate_parents``).  Follows one level of
+    aliasing through assignments (``step = a if cond else b``)."""
+    if _depth > 2:
+        return []
+    if isinstance(at, ast.IfExp) or isinstance(name_node, ast.IfExp):
+        node = name_node if isinstance(name_node, ast.IfExp) else at
+        return (resolve_local(node.body, at, _depth + 1)
+                + resolve_local(node.orelse, at, _depth + 1))
+    if not isinstance(name_node, ast.Name):
+        return []
+    name = name_node.id
+    scopes = enclosing_functions(at)
+    # module scope last
+    top = at
+    while getattr(top, "_rsa_parent", None) is not None:
+        top = top._rsa_parent                   # type: ignore[attr-defined]
+    scopes = scopes + [top]
+    for scope in scopes:
+        defs = scoped_defs(scope)
+        if name in defs:
+            return [defs[name]]
+        # nearest assignment alias: step = paged_step if c else gather_step
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == name
+                    for t in node.targets):
+                return resolve_local(node.value, node, _depth + 1)
+    return []
+
+
+def jitted_functions(tree: ast.AST) -> Iterator[Tuple[ast.AST, ast.Call]]:
+    """Yield (FunctionDef, jit Call) pairs: decorated functions and
+    functions referenced in a ``jax.jit(f, ...)`` call, resolved through
+    the call site's LEXICAL scope (requires ``annotate_parents`` — the
+    driver rules call it first)."""
+    annotate_parents(tree)
+    seen = set()
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            for dec in node.decorator_list:
+                if _is_jit_name(dotted(dec)):
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        yield node, ast.Call(func=dec, args=[], keywords=[])
+                elif isinstance(dec, ast.Call) and (
+                        _is_jit_name(dotted(dec.func))
+                        or is_partial_of_jit(dec)):
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        yield node, dec
+        elif isinstance(node, ast.Call):
+            target = jit_target(node)
+            if target is not None:
+                for fn in resolve_local(target, node):
+                    if id(fn) not in seen:
+                        seen.add(id(fn))
+                        yield fn, node
+
+
+def pallas_kernels(tree: ast.AST) -> Iterator[ast.AST]:
+    """FunctionDefs passed (possibly through ``functools.partial``) as
+    the kernel argument of a ``pl.pallas_call(...)``."""
+    defs = defs_by_name(tree)
+    seen = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func) or ""
+        if not name.endswith("pallas_call"):
+            continue
+        if not node.args:
+            continue
+        kern = node.args[0]
+        if isinstance(kern, ast.Call):          # functools.partial(kernel, .)
+            if dotted(kern.func) in ("functools.partial", "partial") \
+                    and kern.args:
+                kern = kern.args[0]
+        if isinstance(kern, ast.Name):
+            for fn in defs.get(kern.id, []):
+                if id(fn) not in seen:
+                    seen.add(id(fn))
+                    yield fn
+        elif isinstance(kern, FuncDef):
+            if id(kern) not in seen:
+                seen.add(id(kern))
+                yield kern
+
+
+def keyword(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp)
+MUTABLE_FACTORIES = ("list", "dict", "set", "collections.defaultdict",
+                     "defaultdict", "collections.OrderedDict",
+                     "OrderedDict", "collections.deque", "deque",
+                     "bytearray")
+
+
+def is_mutable_value(node: ast.AST) -> bool:
+    if isinstance(node, MUTABLE_DISPLAYS):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted(node.func) in MUTABLE_FACTORIES
+    return False

@@ -1,0 +1,117 @@
+"""RSA001 — jit-signature hygiene.
+
+Jitted stage steps retrace on every new static-argument *value* and on
+every identity change of a captured Python object, so two patterns turn
+into silent recompiles (or, worse, silently stale numerics when the
+capture mutates in place):
+
+  * a **mutable default argument** on a jitted function — the default's
+    identity is baked into the trace, and in-place mutation after
+    tracing never re-enters the compiled step;
+  * **closure capture of mutable enclosing-scope state** (a list/dict/
+    set built in the enclosing function, especially one that is mutated
+    there) — the trace reads the capture once; later mutations are
+    invisible, and rebinding forces a retrace per rebind.
+
+The engine's sanctioned pattern captures only immutable handles
+(``model = self.model``) and threads everything else through traced
+arguments or hashable ``static_argnames``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from . import _common as c
+
+RULE_ID = "RSA001"
+SUMMARY = ("jitted functions must not take mutable default args or close "
+           "over mutable enclosing-scope state (silent recompiles / stale "
+           "traces)")
+
+
+def _bound_names(fn: ast.AST) -> set:
+    """Names bound inside ``fn`` (params + assignments + imports)."""
+    names = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        names.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, c.FuncDef) and node is not fn:
+            names.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    return names
+
+
+def _mutated_names(scope: ast.AST) -> set:
+    """Names mutated in-place in ``scope``: augassign, subscript store,
+    or a mutating method call (append/extend/update/...)."""
+    mutators = {"append", "extend", "insert", "update", "add", "pop",
+                "popitem", "clear", "remove", "setdefault", "discard"}
+    out = set()
+    for node in ast.walk(scope):
+        if isinstance(node, ast.AugAssign) and \
+                isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+        elif isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                isinstance(node.value, ast.Name):
+            out.add(node.value.id)
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in mutators and \
+                isinstance(node.func.value, ast.Name):
+            out.add(node.func.value.id)
+    return out
+
+
+def check(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Tuple[int, int, str]]:
+    c.annotate_parents(tree)
+    for fn, _jit in c.jitted_functions(tree):
+        # (a) mutable default arguments
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            if c.is_mutable_value(d):
+                yield (d.lineno, d.col_offset,
+                       f"jitted function {fn.name!r} has a mutable "
+                       f"default argument (identity is baked into the "
+                       f"trace; mutation never re-enters the step)")
+        # (b) closure capture of mutable enclosing-scope bindings
+        enclosing = c.enclosing_functions(fn)
+        if not enclosing:
+            continue
+        bound = _bound_names(fn)
+        mutable_outer = {}
+        mutated_outer = set()
+        for scope in enclosing:
+            mutated_outer |= _mutated_names(scope)
+            for node in ast.walk(scope):
+                if isinstance(node, ast.Assign) and \
+                        c.is_mutable_value(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            mutable_outer[t.id] = node.lineno
+        reported = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            name = node.id
+            if name in bound or name in reported:
+                continue
+            if name in mutable_outer and name in mutated_outer:
+                reported.add(name)
+                yield (node.lineno, node.col_offset,
+                       f"jitted function {fn.name!r} closes over "
+                       f"{name!r}, a mutable container built at line "
+                       f"{mutable_outer[name]} and mutated in the "
+                       f"enclosing scope (the trace will not see the "
+                       f"mutations)")

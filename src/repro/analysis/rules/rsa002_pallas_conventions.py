@@ -1,0 +1,120 @@
+"""RSA002 — Pallas kernel conventions.
+
+Three conventions the repo's scalar-prefetch kernels rely on:
+
+  * **BlockSpec index maps must be pure index arithmetic** — no
+    ``jnp.``/``jax.lax.`` calls.  An index map runs at block-dispatch
+    time; a traced op inside it either fails to lower or silently
+    materializes per-block work the grid cost model never sees.
+  * **Scalar-prefetch operands come first** in the kernel signature:
+    under ``PrefetchScalarGridSpec(num_scalar_prefetch=N, ...)`` the
+    first ``N`` kernel parameters are the SMEM scalar refs (slot ids,
+    kv lengths, block tables) — an array ref (``q_ref``/``k_ref``/...)
+    in those positions means the kernel is reading SMEM scalars as
+    VMEM blocks.
+  * **Grid dims are derived, not literal**: a hard-coded grid extent
+    (``grid=(8, ...)``) silently truncates or over-runs when block
+    shapes change; extents must come from block-shape divisibility
+    (``S // block_kv``) or operand shapes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from . import _common as c
+
+RULE_ID = "RSA002"
+SUMMARY = ("BlockSpec index maps pure, scalar-prefetch refs declared "
+           "before array refs, grid dims derived from block-shape "
+           "divisibility (not integer literals)")
+
+_TRACED_ROOTS = ("jnp", "jax", "lax", "np", "numpy")
+_ARRAYISH_PARAMS = {"q_ref", "k_ref", "v_ref", "o_ref", "x_ref", "y_ref",
+                    "acc_ref", "m_ref", "l_ref", "out_ref", "lhs_ref",
+                    "rhs_ref"}
+
+
+def _index_map_bodies(tree: ast.AST):
+    """(callable_node, where) for every BlockSpec index map: lambdas /
+    named local functions passed to ``pl.BlockSpec`` positionally or as
+    ``index_map=``."""
+    defs = c.defs_by_name(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = c.dotted(node.func) or ""
+        if not name.endswith("BlockSpec"):
+            continue
+        cands = list(node.args[1:2])
+        km = c.keyword(node, "index_map")
+        if km is not None:
+            cands.append(km)
+        for cand in cands:
+            if isinstance(cand, ast.Lambda):
+                yield cand, "lambda"
+            elif isinstance(cand, ast.Name):
+                for fn in defs.get(cand.id, []):
+                    yield fn, fn.name
+
+
+def _flag_traced_ops(body: ast.AST, where: str
+                     ) -> Iterator[Tuple[int, int, str]]:
+    for node in ast.walk(body):
+        if isinstance(node, ast.Call):
+            name = c.dotted(node.func)
+            if name and name.split(".")[0] in _TRACED_ROOTS:
+                yield (node.lineno, node.col_offset,
+                       f"traced op {name}() inside BlockSpec index map "
+                       f"({where}); index maps must be pure index "
+                       f"arithmetic")
+
+
+def _grid_literals(call: ast.Call) -> Iterator[Tuple[int, int, str]]:
+    grid = c.keyword(call, "grid")
+    if not isinstance(grid, (ast.Tuple, ast.List)):
+        return
+    for dim in grid.elts:
+        if isinstance(dim, ast.Constant) and isinstance(dim.value, int) \
+                and dim.value > 1:
+            yield (dim.lineno, dim.col_offset,
+                   f"grid dim is the integer literal {dim.value}; derive "
+                   f"it from block-shape divisibility (e.g. S // block) "
+                   f"so block-size changes cannot desynchronize the grid")
+
+
+def check(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Tuple[int, int, str]]:
+    # (a) index-map purity
+    seen = set()
+    for body, where in _index_map_bodies(tree):
+        if id(body) in seen:
+            continue
+        seen.add(id(body))
+        yield from _flag_traced_ops(body, where)
+
+    # (b) scalar-prefetch ordering + (c) literal grid dims
+    kernels = list(c.pallas_kernels(tree))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = c.dotted(node.func) or ""
+        if name.endswith("PrefetchScalarGridSpec"):
+            yield from _grid_literals(node)
+            n_pref = c.keyword(node, "num_scalar_prefetch")
+            if isinstance(n_pref, ast.Constant) and \
+                    isinstance(n_pref.value, int):
+                n = n_pref.value
+                for fn in kernels:
+                    params = [a.arg for a in fn.args.args][:n]
+                    bad = [p for p in params if p in _ARRAYISH_PARAMS]
+                    if bad:
+                        yield (fn.lineno, fn.col_offset,
+                               f"kernel {fn.name!r}: array ref(s) "
+                               f"{bad} among the first "
+                               f"{n} parameters, which are the "
+                               f"scalar-prefetch SMEM refs "
+                               f"(num_scalar_prefetch={n}) — declare "
+                               f"scalar refs before array refs")
+        elif name.endswith("pallas_call"):
+            yield from _grid_literals(node)

@@ -1,0 +1,224 @@
+"""RSA003 — donation safety.
+
+``jax.jit(..., donate_argnums=(k,))`` (and Pallas
+``input_output_aliases``) invalidates the donated operand's buffer at
+the call: reading the same Python expression afterwards — before it is
+rebound — observes freed (or aliased-output) memory.  The engine's
+sanctioned pattern rebinds immediately::
+
+    logits, new_states = self._step(params, arena.states, ...)
+    arena.states = new_states          # donated expr rebound first
+
+This rule tracks three donation sources to the call sites and flags any
+Load of a donated argument expression after the call and before its
+rebinding, within the same function body:
+
+  * direct ``g = jax.jit(f, donate_argnums=...)`` then ``g(...)``;
+  * factory functions that *return* a donating ``jax.jit`` (including
+    the ``kwargs["donate_argnums"] = ...; jax.jit(f, **kwargs)`` idiom)
+    whose result is stored on an attribute (``self._step = self.
+    _build_step()``) and called elsewhere in the module;
+  * ``pl.pallas_call(..., input_output_aliases={k: j})(ops...)`` —
+    operand ``k`` (offset by ``num_scalar_prefetch`` when a
+    PrefetchScalarGridSpec is in scope) aliases an output.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from . import _common as c
+
+RULE_ID = "RSA003"
+SUMMARY = ("donated buffers (donate_argnums / input_output_aliases) must "
+           "not be read after the donating call before rebinding")
+
+
+def _const_positions(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Evaluate a donate_argnums value if it is a literal int/tuple."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _jit_donations(call: ast.Call, scope: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Donated positions of a jax.jit call, following the
+    ``kwargs["donate_argnums"] = ...; jax.jit(f, **kwargs)`` idiom."""
+    if not c._is_jit_name(c.dotted(call.func)):
+        return None
+    val = c.keyword(call, "donate_argnums")
+    if val is not None:
+        return _const_positions(val)
+    starred = [kw.value for kw in call.keywords if kw.arg is None]
+    for star in starred:
+        if not isinstance(star, ast.Name):
+            continue
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.targets[0], ast.Subscript) and \
+                    isinstance(node.targets[0].value, ast.Name) and \
+                    node.targets[0].value.id == star.id and \
+                    isinstance(node.targets[0].slice, ast.Constant) and \
+                    node.targets[0].slice.value == "donate_argnums":
+                return _const_positions(node.value)
+    return None
+
+
+def _donated_handles(tree: ast.AST) -> Dict[str, Tuple[int, ...]]:
+    """Map callee last-segment name -> donated positions.
+
+    Covers ``g = jax.jit(..)`` (name ``g``), ``self.attr = jax.jit(..)``
+    (name ``attr``), and factory indirection: a function whose return
+    value is a donating jit, stored via ``X = <...>.factory()``.
+    """
+    handles: Dict[str, Tuple[int, ...]] = {}
+    factories: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, c.FuncDef):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and \
+                        isinstance(sub.value, ast.Call):
+                    pos = _jit_donations(sub.value, node)
+                    if pos:
+                        factories[node.name] = pos
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _jit_donations(node.value, tree)
+            if pos:
+                for t in node.targets:
+                    name = t.id if isinstance(t, ast.Name) else (
+                        t.attr if isinstance(t, ast.Attribute) else None)
+                    if name:
+                        handles[name] = pos
+    # factory results: X = obj.factory()  /  X = factory()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fname = (c.dotted(node.value.func) or "").split(".")[-1]
+            if fname in factories:
+                for t in node.targets:
+                    name = t.id if isinstance(t, ast.Name) else (
+                        t.attr if isinstance(t, ast.Attribute) else None)
+                    if name:
+                        handles[name] = factories[fname]
+    return handles
+
+
+class _ExprUse(ast.NodeVisitor):
+    """Ordered (kind, lineno, col) uses of a target expression inside one
+    statement, loads-before-stores for Assign (RHS evaluates first)."""
+
+    def __init__(self, expr: str):
+        self.expr = expr
+        self.uses: List[Tuple[str, int, int]] = []
+
+    def _match(self, node: ast.AST) -> bool:
+        try:
+            return ast.unparse(node) == self.expr
+        except Exception:
+            return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        for t in node.targets:
+            self._visit_store_target(t)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if self._match(node.target):        # aug-assign READS the target
+            self.uses.append(("load", node.lineno, node.col_offset))
+        self.visit(node.value)
+
+    def _visit_store_target(self, t: ast.AST) -> None:
+        if self._match(t):
+            self.uses.append(("store", t.lineno, t.col_offset))
+            return
+        # a subscript/attribute store on a PREFIX of the expr still reads
+        # the base object; a store to an unrelated target may still load
+        # the expr on its index — walk children as loads
+        for child in ast.iter_child_nodes(t):
+            self.visit(child)
+
+    def generic_visit(self, node: ast.AST) -> None:
+        if self._match(node):
+            ctx = getattr(node, "ctx", None)
+            kind = "store" if isinstance(ctx, (ast.Store, ast.Del)) \
+                else "load"
+            self.uses.append((kind, node.lineno, node.col_offset))
+            return                          # don't double-count children
+        super().generic_visit(node)
+
+
+def _stmts_after(body: List[ast.stmt], stmt: ast.stmt) -> List[ast.stmt]:
+    for i, s in enumerate(body):
+        if s is stmt or any(sub is stmt for sub in ast.walk(s)):
+            return body[i + 1:]
+    return []
+
+
+def _check_call(call: ast.Call, positions: Tuple[int, ...],
+                fn: ast.AST, stmt: ast.stmt
+                ) -> Iterator[Tuple[int, int, str]]:
+    callee = c.dotted(call.func) or "<call>"
+    for pos in positions:
+        if pos >= len(call.args):
+            continue
+        arg = call.args[pos]
+        try:
+            expr = ast.unparse(arg)
+        except Exception:
+            continue
+        if isinstance(arg, ast.Constant):
+            continue
+        rebound = False
+        for later in _stmts_after(fn.body, stmt):
+            uses = _ExprUse(expr)
+            uses.visit(later)
+            for kind, line, col in uses.uses:
+                if kind == "store":
+                    rebound = True
+                    break
+                yield (line, col,
+                       f"{expr!r} is donated to {callee}() "
+                       f"(donate position {pos}) at line "
+                       f"{call.lineno} and read here before being "
+                       f"rebound — the buffer is invalid after "
+                       f"donation")
+            if rebound:
+                break
+
+
+def check(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Tuple[int, int, str]]:
+    c.annotate_parents(tree)
+    handles = _donated_handles(tree)
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, c.FuncDef):
+            continue
+        for stmt in fn.body:
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                # donated jit handle call:  self._step(...)
+                last = (c.dotted(call.func) or "").split(".")[-1]
+                if last in handles:
+                    yield from _check_call(call, handles[last], fn, stmt)
+                # immediate pallas_call alias:  pl.pallas_call(...)(a, b)
+                if isinstance(call.func, ast.Call):
+                    inner = call.func
+                    nm = c.dotted(inner.func) or ""
+                    if nm.endswith("pallas_call"):
+                        alias = c.keyword(inner, "input_output_aliases")
+                        if isinstance(alias, ast.Dict):
+                            pos = tuple(
+                                k.value for k in alias.keys
+                                if isinstance(k, ast.Constant)
+                                and isinstance(k.value, int))
+                            if pos:
+                                yield from _check_call(call, pos, fn, stmt)

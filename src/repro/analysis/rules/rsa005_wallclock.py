@@ -1,0 +1,56 @@
+"""RSA005 — no wall-clock or host-RNG calls inside jitted/kernel bodies.
+
+A jitted function body (or Pallas kernel) executes at TRACE time: a
+``time.perf_counter()`` / ``np.random...`` / ``random...`` call inside
+one evaluates once during tracing and is then a frozen constant in the
+compiled step — timing that never ticks, randomness that never
+re-samples, and a value that silently changes on every recompile.
+Host-side timing belongs around the jitted call (the engine's
+``host``/``dispatch``/``device`` segments); randomness inside traced
+code must come from ``jax.random`` keys threaded as arguments.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from . import _common as c
+
+RULE_ID = "RSA005"
+SUMMARY = ("no time.*/datetime.*/np.random.*/random.* calls inside jitted "
+           "or Pallas-kernel bodies (they freeze at trace time)")
+
+_BANNED_EXACT = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "time.monotonic_ns", "time.process_time",
+    "datetime.datetime.now", "datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today", "date.today",
+}
+_BANNED_PREFIX = ("np.random.", "numpy.random.", "random.")
+
+
+def _banned(name: str) -> bool:
+    return name in _BANNED_EXACT or \
+        any(name.startswith(p) for p in _BANNED_PREFIX)
+
+
+def check(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Tuple[int, int, str]]:
+    bodies = [fn for fn, _ in c.jitted_functions(tree)]
+    bodies += list(c.pallas_kernels(tree))
+    seen = set()
+    for fn in bodies:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = c.dotted(node.func)
+            if name and _banned(name):
+                yield (node.lineno, node.col_offset,
+                       f"{name}() inside jitted/kernel body {fn.name!r}: "
+                       f"evaluates once at trace time and freezes into "
+                       f"the compiled step (hoist to the host side, or "
+                       f"thread jax.random keys / timestamps as "
+                       f"arguments)")

@@ -196,6 +196,11 @@ def paged_decode_attention_pallas(
     (copy-on-write happens at the serving layer by editing the table).
     When given, ``slots`` is ignored by the index maps.
     """
+    from . import sanitize        # deferred: keep module import DAG flat
+    sanitize.notify_rows(
+        "paged_decode_attention_pallas",
+        slots if block_tables is None else block_tables,
+        k_arena.shape[0] - 1)
     B, Hq, Dh = q.shape
     _, S, Hkv, _ = k_arena.shape
     assert Hq % Hkv == 0

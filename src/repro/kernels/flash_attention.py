@@ -229,6 +229,11 @@ def paged_flash_attention_pallas(
     index stays ``j``, so shared prefix rows are read at the positions
     they were prefilled at.  When given, ``slots`` is ignored.
     """
+    from . import sanitize        # deferred: keep module import DAG flat
+    sanitize.notify_rows(
+        "paged_flash_attention_pallas",
+        slots if block_tables is None else block_tables,
+        k_arena.shape[0] - 1)
     B, Hq, Sq, Dh = q.shape
     _, S_alloc, Hkv, _ = k_arena.shape
     assert Hq % Hkv == 0, (Hq, Hkv)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from . import sanitize
 from .flash_attention import flash_attention_pallas, paged_flash_attention_pallas
 from .decode_attention import decode_attention_pallas, paged_decode_attention_pallas
 from .relevance_score import relevance_score_pallas
@@ -335,6 +336,8 @@ def arena_decode_attention(
     if block_tables is not None:
         _check_slots(block_tables, k_arena.shape[0],
                      "arena_decode_attention block_tables")
+        sanitize.notify_rows("arena_decode_attention block_tables",
+                             block_tables, k_arena.shape[0] - 1)
         tb = _block_granularity(block_tables, S, "arena_decode_attention")
         if impl in ("pallas", "pallas_interpret") \
                 and tb == min(block_kv, S) and S % tb == 0:
@@ -347,6 +350,8 @@ def arena_decode_attention(
         return decode_attention(q, k, v, kv_len, sm_scale=sm_scale,
                                 impl=impl, block_kv=block_kv)
     _check_slots(slots, k_arena.shape[0], "arena_decode_attention")
+    sanitize.notify_rows("arena_decode_attention", slots,
+                         k_arena.shape[0] - 1)
     if impl in ("pallas", "pallas_interpret"):
         if S % min(block_kv, S) == 0:
             return paged_decode_attention_pallas(
@@ -399,6 +404,8 @@ def attention_paged(
     if block_tables is not None:
         _check_slots(block_tables, k_arena.shape[0],
                      "attention_paged block_tables")
+        sanitize.notify_rows("attention_paged block_tables", block_tables,
+                             k_arena.shape[0] - 1)
         tb = _block_granularity(block_tables, S_alloc, "attention_paged")
         Sq = q.shape[1]
         if (impl in ("pallas", "pallas_interpret")
@@ -418,6 +425,7 @@ def attention_paged(
                          q_offset=q_offset, kv_len=kv_len, sm_scale=sm_scale,
                          impl=impl, block_q=block_q, block_kv=block_kv)
     _check_slots(slots, k_arena.shape[0], "attention_paged")
+    sanitize.notify_rows("attention_paged", slots, k_arena.shape[0] - 1)
     if impl in ("pallas", "pallas_interpret"):
         Sq = q.shape[1]
         if (Sq % min(block_q, Sq) == 0

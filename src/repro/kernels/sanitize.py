@@ -1,0 +1,60 @@
+"""Kernel-side sanitizer hook registry (host side, zero-cost when off).
+
+The paged kernel wrappers (``ops.arena_decode_attention`` /
+``ops.attention_paged`` and the Pallas host wrappers in
+``decode_attention.py`` / ``flash_attention.py``) address arena rows
+through slot ids and block tables.  Inside a jitted stage step those
+operands are tracers and nothing can be checked here — the engine-side
+:class:`repro.analysis.sanitizer.ArenaSanitizer` launch brackets are
+the jit-safe layer.  But the wrappers are also called EAGERLY (kernel
+parity tests, benchmarks, notebooks), and there the slot/block-table
+values are concrete: ``notify_rows`` hands them to any registered
+hooks (``ArenaSanitizer.kernel_hook()`` validates range membership and
+— when launches are in flight — registration in an in-flight row set).
+
+No hooks registered (the default) costs one ``if`` per wrapper call;
+tracers always short-circuit, so compiled paths are untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+Hook = Callable[[str, Any, int], None]      # (where, rows, n_rows)
+
+_hooks: Dict[int, Hook] = {}
+_next_id = 0
+
+
+def add_row_hook(hook: Hook) -> int:
+    """Register a hook; returns a handle for :func:`remove_row_hook`."""
+    global _next_id
+    hid = _next_id
+    _next_id += 1
+    _hooks[hid] = hook
+    return hid
+
+
+def remove_row_hook(hid: int) -> None:
+    _hooks.pop(hid, None)
+
+
+def clear_row_hooks() -> None:
+    _hooks.clear()
+
+
+def notify_rows(where: str, rows: Any, n_rows: int) -> None:
+    """Report concrete arena-row operands to registered hooks.
+
+    ``rows`` may be slot ids [B] or block tables [B, nkv]; ``n_rows``
+    is the arena's row count INCLUDING the scratch row convention
+    (valid ids lie in ``[0, n_rows]`` with ``n_rows`` = scratch).
+    Tracers (jit/vmap abstraction) are skipped — see module docstring.
+    """
+    if not _hooks:
+        return
+    import jax
+
+    if isinstance(rows, jax.core.Tracer):
+        return
+    for hook in list(_hooks.values()):
+        hook(where, rows, n_rows)

@@ -89,6 +89,11 @@ class BucketArena:
     slot_op: Dict[int, str] = field(default_factory=dict)      # slot -> op
     growths: int = 0               # capacity doublings (telemetry counter:
     #                                each one is a device-side realloc+copy)
+    # Optional runtime race detector (analysis.sanitizer.ArenaSanitizer,
+    # installed by LMBackend when ARENA_SANITIZE=1 / sanitize=True).  The
+    # arena reports row recycling and prefix pin/unpin transitions; the
+    # backend brackets launches.  None (the default) costs nothing.
+    sanitizer: Any = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.states is None:
@@ -134,6 +139,8 @@ class BucketArena:
         [0, f_len) and every read is masked by per-slot valid lengths, so
         stale KV past the new prefix is never visible.
         """
+        if self.sanitizer is not None:
+            self.sanitizer.note_clear(self.bucket, slot)
         self.cached_len[slot] = 0
         self.true_len[slot] = 0
         self.slot_op.pop(slot, None)
@@ -181,6 +188,8 @@ class BucketArena:
             f"prefix row {row} ({op_id!r}) dropped while referenced"
         self.prefix_refs.pop(row, None)
         self.prefix_len.pop(row, None)
+        if self.sanitizer is not None:
+            self.sanitizer.note_unpin(self.bucket, row)
         return row
 
     def nbytes(self) -> int:

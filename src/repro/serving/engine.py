@@ -346,6 +346,36 @@ class LMBackend:
     last_copy_bytes: int = field(default=0, repr=False)
     last_hbm_bytes: Optional[float] = field(default=None, repr=False)
     _params_nbytes: Optional[int] = field(default=None, repr=False)
+    # Runtime arena sanitizer (analysis.sanitizer.ArenaSanitizer): per-row
+    # ownership epochs + launch read/write-set brackets that turn silent
+    # slot-aliasing races into a diagnostic ``ArenaRaceError``.  None =
+    # follow the ARENA_SANITIZE env var; True/False force it.  The checks
+    # are host-side metadata only — device math, the $-ledger, RNG draws
+    # and hub telemetry counters are bitwise unaffected (violations, which
+    # abort the run anyway, are the only hub-visible events).
+    sanitize: Optional[bool] = None
+    # callback rid -> {"query":..., "doc":...} installed by CascadeServer
+    # so sanitizer diagnostics can name the owning query/document
+    doc_info: Optional[Any] = field(default=None, repr=False)
+    _sanitizer: Optional[Any] = field(default=None, repr=False)
+
+    def sanitizer(self):
+        """The active ``ArenaSanitizer`` (lazily built), or None when off."""
+        enabled = self.sanitize
+        if enabled is None:
+            from ..analysis.sanitizer import env_enabled
+            enabled = env_enabled()
+        if not enabled:
+            return None
+        if self._sanitizer is None:
+            from ..analysis.sanitizer import ArenaSanitizer
+            self._sanitizer = ArenaSanitizer(backend=self.name,
+                                             doc_info=lambda rid: (
+                                                 self.doc_info(rid)
+                                                 if self.doc_info else None),
+                                             telemetry=self.telemetry)
+        self._sanitizer.telemetry = self.telemetry   # server may install late
+        return self._sanitizer
 
     def reset(self) -> None:
         self._arenas.clear()
@@ -360,6 +390,8 @@ class LMBackend:
         self.last_timing = None
         self.last_copy_bytes = 0
         self.last_hbm_bytes = None
+        if self._sanitizer is not None:
+            self._sanitizer.reset()
         # the jitted step closes over model only; its compile cache survives
         # (telemetry handle survives too — the server owns its lifecycle)
 
@@ -437,6 +469,8 @@ class LMBackend:
             ar = self._arenas.get(bucket)
             if ar is not None:
                 ar.detach_prefix(slot)     # unpin the shared op-prefix row
+                if ar.sanitizer is not None:
+                    ar.sanitizer.note_release(bucket, slot)
             self._alloc.release(bucket, doc_id)
 
     # ------------------------------------------------------- memory control
@@ -582,7 +616,9 @@ class LMBackend:
         if ar is None:
             return
         for op_key in ar.unreferenced_prefix_ops():
-            ar.drop_prefix(op_key)
+            row = ar.drop_prefix(op_key)   # arena hook unpins for sanitizer
+            if ar.sanitizer is not None:
+                ar.sanitizer.note_release(bucket, row)
             pid = self._prefix_ids.pop((bucket, op_key), None)
             if pid is not None:
                 self._alloc.release(bucket, pid)
@@ -614,7 +650,9 @@ class LMBackend:
         assert self._live_real(bucket) == 0, \
             f"bucket {bucket} retired with live slots"
         self._reclaim_prefix_rows(bucket)
-        self._arenas.pop(bucket, None)
+        ar = self._arenas.pop(bucket, None)
+        if ar is not None and ar.sanitizer is not None:
+            ar.sanitizer.note_retire(bucket)
         self._alloc.retire_bucket(bucket)
         self._idle.pop(bucket, None)
 
@@ -644,7 +682,8 @@ class LMBackend:
         if ar is None:
             ar = BucketArena(self.model, bucket, self._s_alloc_for(bucket),
                              capacity=self._initial_capacity(bucket),
-                             kv_dtype=self._kv_jnp_dtype())
+                             kv_dtype=self._kv_jnp_dtype(),
+                             sanitizer=self.sanitizer())
             self._arenas[bucket] = ar
         return ar
 
@@ -657,6 +696,8 @@ class LMBackend:
             slot = self._alloc.slot_of(bucket, doc_id)
             arena.ensure_capacity(self._alloc.high_water(bucket))
             arena.clear_slot(slot)
+            if arena.sanitizer is not None:
+                arena.sanitizer.note_alloc(bucket, slot, doc_id)
             self._doc_slot[doc_id] = (bucket, slot)
         return slot
 
@@ -812,6 +853,9 @@ class LMBackend:
         row = self._alloc.slot_of(bucket, pid)
         arena.ensure_capacity(self._alloc.high_water(bucket))
         arena.clear_slot(row)
+        san = arena.sanitizer
+        if san is not None:
+            san.note_alloc(bucket, row, pid)
         arena.prefix_row[op_key] = row
         arena.prefix_refs[row] = 0
         P = len(op_tokens)
@@ -823,10 +867,22 @@ class LMBackend:
         p_eff = self._prefix_eff_len(P)
         tok = np.full(p_eff, PAD, np.int32)
         tok[:P] = op_tokens
-        _, arena.states = self.model.extend(
-            self.params, {"tokens": jnp.asarray(tok)[None]},
-            arena.states, q_offset=0, kv_len=jnp.asarray([p_eff], jnp.int32),
-            slots=jnp.asarray([row], jnp.int32))
+        ticket = None
+        if san is not None:
+            ticket = san.begin_launch(
+                bucket, (self.name, "prefix_prefill", op_key, bucket),
+                reads={row}, writes={row}, scratch=arena.scratch_slot)
+        try:
+            _, arena.states = self.model.extend(
+                self.params, {"tokens": jnp.asarray(tok)[None]},
+                arena.states, q_offset=0,
+                kv_len=jnp.asarray([p_eff], jnp.int32),
+                slots=jnp.asarray([row], jnp.int32))
+        finally:
+            if san is not None:
+                san.end_launch(ticket)
+        if san is not None:
+            san.note_pin(bucket, row, op_key)
         return row
 
     def _prefix_eff_len(self, P: int) -> int:
@@ -908,14 +964,27 @@ class LMBackend:
             ts = time.perf_counter()
             for d in fresh_docs:
                 tm.event(d, EV_PREFIX_HIT, ts, {"backend": self.name})
+        san = arena.sanitizer
         if fresh and rem > 0:
             n = len(fresh)
             src = jnp.full((n,), row, jnp.int32)
             dst = jnp.asarray(fresh, jnp.int32)
             start = jnp.full((n,), rem_start, jnp.int32)
-            win = self.model.take_kv_window(arena.states, src, start, rem)
-            arena.states = self.model.put_kv_window(arena.states, dst,
-                                                    start, rem, win)
+            cow_ticket = None
+            if san is not None:
+                with san.cow(bucket):
+                    cow_ticket = san.begin_launch(
+                        bucket, (self.name, "cow_copy", op_key, bucket),
+                        reads={row}, writes=set(fresh),
+                        scratch=arena.scratch_slot)
+            try:
+                win = self.model.take_kv_window(arena.states, src, start,
+                                                rem)
+                arena.states = self.model.put_kv_window(arena.states, dst,
+                                                        start, rem, win)
+            finally:
+                if san is not None:
+                    san.end_launch(cow_ticket)
             self.cow_copies += n
             if tm is not None and tm.tracing:
                 ts = time.perf_counter()
@@ -957,15 +1026,29 @@ class LMBackend:
         if self._prefix_step is None:
             self._prefix_step = self._build_prefix_step()
         t2 = time.perf_counter()
-        logits, new_states = self._prefix_step(
-            self.params, arena.states, jnp.asarray(slots_arr),
-            jnp.asarray(bt), jnp.asarray(new_tok), jnp.asarray(last_tok),
-            jnp.asarray(kv_true), jnp.asarray(ext_true),
-            c_len=eff_c, p_len=p_eff)
-        arena.states = new_states
-        t3 = time.perf_counter()
-        self.host_overhead_s += t3 - t2    # async dispatch
-        jax.block_until_ready((logits, new_states))
+        ticket = None
+        if san is not None:
+            # block-table columns resolve to slots + the pinned prefix row:
+            # writes land in the private rows, the row is the shared read
+            ticket = san.begin_launch(
+                bucket, (self.name, "prefix_step", op_key, bucket, eff_c,
+                         f_len, B),
+                reads=set(slots) | {row}, writes=set(slots),
+                scratch=arena.scratch_slot)
+        try:
+            logits, new_states = self._prefix_step(
+                self.params, arena.states, jnp.asarray(slots_arr),
+                jnp.asarray(bt), jnp.asarray(new_tok),
+                jnp.asarray(last_tok),
+                jnp.asarray(kv_true), jnp.asarray(ext_true),
+                c_len=eff_c, p_len=p_eff)
+            arena.states = new_states
+            t3 = time.perf_counter()
+            self.host_overhead_s += t3 - t2    # async dispatch
+            jax.block_until_ready((logits, new_states))
+        finally:
+            if san is not None:
+                san.end_launch(ticket)
         t4 = time.perf_counter()
         self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
                             "device": t4 - t3}
@@ -1107,18 +1190,29 @@ class LMBackend:
         if self._step is None:
             self._step = self._build_step()
         t2 = time.perf_counter()
-        logits, new_states = self._step(
-            self.params, arena.states, jnp.asarray(slots_arr),
-            jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
-            jnp.asarray(kv_true), jnp.asarray(ext_true),
-            c_len=eff_c, op_len=op_len)
-        arena.states = new_states
-        t3 = time.perf_counter()
-        self.host_overhead_s += t3 - t2    # async dispatch
-        # device segment: wait out the step here (host-side sync only —
-        # the np.asarray readout below then costs nothing extra) so the
-        # timeline can split dispatch from device wall time
-        jax.block_until_ready((logits, new_states))
+        san = arena.sanitizer
+        ticket = None
+        if san is not None:
+            ticket = san.begin_launch(
+                bucket, (self.name, "step", bucket, eff_c, f_len, B),
+                reads=set(slots), writes=set(slots),
+                scratch=arena.scratch_slot)
+        try:
+            logits, new_states = self._step(
+                self.params, arena.states, jnp.asarray(slots_arr),
+                jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
+                jnp.asarray(kv_true), jnp.asarray(ext_true),
+                c_len=eff_c, op_len=op_len)
+            arena.states = new_states
+            t3 = time.perf_counter()
+            self.host_overhead_s += t3 - t2    # async dispatch
+            # device segment: wait out the step here (host-side sync only —
+            # the np.asarray readout below then costs nothing extra) so the
+            # timeline can split dispatch from device wall time
+            jax.block_until_ready((logits, new_states))
+        finally:
+            if san is not None:
+                san.end_launch(ticket)
         t4 = time.perf_counter()
         self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
                             "device": t4 - t3}
@@ -1373,6 +1467,17 @@ class CascadeServer:
             self._tok = {m: {} for m in self.backends}
         for be in self.backends.values():   # share the hub with backends
             be.telemetry = self.telemetry
+            # sanitizer diagnostics name the owning query/document
+            be.doc_info = self._doc_info
+
+    def _doc_info(self, rid: int) -> Optional[Dict[str, Any]]:
+        """Owner lookup for arena-sanitizer diagnostics: server request id
+        -> the owning query and caller document ids (None if unknown —
+        e.g. prefix pseudo-ids, which are negative and never submitted)."""
+        req = self._requests.get(rid)
+        if req is None:
+            return None
+        return {"query": req.query_id, "doc": req.ext_id}
 
     def _op_tokens(self, backend, op_id: str) -> np.ndarray:
         key = (backend.name, op_id)
@@ -1813,10 +1918,17 @@ class CascadeServer:
         self._arena_bytes_peak = max(self._arena_bytes_peak, nbytes)
         if tm.enabled:
             tm.set_gauge("serve_arena_bytes_peak", self._arena_bytes_peak)
+        # sanitizer check totals ride the PRIVATE per-sanitizer registries
+        # (never the hub — its gated series must be sanitize-inert); the
+        # stats mirror is how runs assert coverage (checks > 0)
+        san_checks = sum(b._sanitizer.checks
+                         for b in self.backends.values()
+                         if getattr(b, "_sanitizer", None) is not None)
         for st in self._query_stats.values():
             st.prefix_hits = self._prefix_hits
             st.cow_copies = self._cow_copies
             st.arena_bytes_peak = self._arena_bytes_peak
+            st.sanitizer_checks = san_checks
 
     # ------------------------------------------------------- fault handling
     def _finish(self, req: DocRequest, status: str, now: float,

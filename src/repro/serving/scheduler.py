@@ -549,6 +549,9 @@ class ServeStats:
     #                                    existing shared op-prefix row
     cow_copies: int = _stat("shared", default=0)   # copy-on-write partial-
     #                                    block copies (prefix -> private)
+    sanitizer_checks: int = _stat("shared", default=0)  # arena-sanitizer
+    #   launch brackets validated (ARENA_SANITIZE=1; 0 when off).  Mirrored
+    #   from the sanitizers' PRIVATE registries — hub metrics stay inert.
 
     def latency_quantile(self, q: float) -> float:
         if not self.latencies:

@@ -105,6 +105,14 @@ EV_QUARANTINE = "quarantine"
 EV_PREFIX_HIT = "prefix_hit"
 EV_COW_COPY = "cow_copy"
 EV_FAULT = "fault"
+# Runtime arena-sanitizer violation (analysis.sanitizer): emitted per
+# owning request right before ``ArenaRaceError`` aborts the run.  The
+# sanitizer's per-launch *check* counters deliberately live on a private
+# registry (``ArenaSanitizer.counters()``) rather than the hub, so an
+# ARENA_SANITIZE=1 run stays counter-inert vs. the shared benchmark
+# baseline; only violations — which abort anyway — touch hub metrics
+# (``serve_sanitizer_violations_total``) and the trace buffer.
+EV_SANITIZER = "sanitizer_violation"
 EV_RESOLVED = "resolved"
 EV_FAILED = "failed"
 EV_TIMED_OUT = "timed_out"

@@ -1,0 +1,323 @@
+"""Static-analysis suite tests: each RSA rule on violating AND clean
+snippets, inline suppression, baseline round-trip, CLI exit codes, and
+the self-test that the shipped tree is clean against the committed
+baseline."""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.lint import (Finding, diff_baseline, lint_source,
+                                 load_baseline, main, save_baseline)
+
+
+def _rules(src):
+    return sorted({f.rule for f in lint_source(textwrap.dedent(src),
+                                               "snippet.py")})
+
+
+# --------------------------------------------------------------- RSA001
+VIOLATING_RSA001_DEFAULT = """
+    import jax
+
+    @jax.jit
+    def step(x, history=[]):
+        return x
+"""
+
+VIOLATING_RSA001_CLOSURE = """
+    import jax
+
+    def build():
+        cache = {}
+        @jax.jit
+        def step(x):
+            return x + len(cache)
+        cache["k"] = 1
+        return step
+"""
+
+CLEAN_RSA001 = """
+    import jax
+
+    def build():
+        scale = 2.0          # immutable closure capture is fine
+        @jax.jit
+        def step(x, history=None):
+            return x * scale
+        return step
+"""
+
+
+def test_rsa001_mutable_default():
+    assert "RSA001" in _rules(VIOLATING_RSA001_DEFAULT)
+
+
+def test_rsa001_mutated_closure():
+    assert "RSA001" in _rules(VIOLATING_RSA001_CLOSURE)
+
+
+def test_rsa001_clean():
+    assert "RSA001" not in _rules(CLEAN_RSA001)
+
+
+# --------------------------------------------------------------- RSA002
+VIOLATING_RSA002_INDEX_MAP = """
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    spec = pl.BlockSpec((1, 128), lambda b, j: (jnp.argmax(b), j))
+"""
+
+VIOLATING_RSA002_PREFETCH_ORDER = """
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kernel(q_ref, slots_ref, o_ref):
+        o_ref[...] = q_ref[...]
+
+    import jax.experimental.pallas as pl
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(4,), in_specs=[], out_specs=None),
+        out_shape=None)
+"""
+
+VIOLATING_RSA002_LITERAL_GRID = """
+    from jax.experimental.pallas import tpu as pltpu
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(8, 16), in_specs=[], out_specs=None)
+"""
+
+CLEAN_RSA002 = """
+    from jax.experimental.pallas import tpu as pltpu
+
+    def build(B, Hkv, nkv):
+        def kernel(kv_len_ref, q_ref, o_ref):
+            o_ref[...] = q_ref[...]
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(B, Hkv, nkv),
+            in_specs=[], out_specs=None)
+        return kernel, spec
+"""
+
+
+def test_rsa002_traced_index_map():
+    assert "RSA002" in _rules(VIOLATING_RSA002_INDEX_MAP)
+
+
+def test_rsa002_prefetch_param_order():
+    assert "RSA002" in _rules(VIOLATING_RSA002_PREFETCH_ORDER)
+
+
+def test_rsa002_literal_grid():
+    assert "RSA002" in _rules(VIOLATING_RSA002_LITERAL_GRID)
+
+
+def test_rsa002_clean():
+    assert "RSA002" not in _rules(CLEAN_RSA002)
+
+
+# --------------------------------------------------------------- RSA003
+VIOLATING_RSA003 = """
+    import jax
+
+    step = jax.jit(lambda p, s: (p, s), donate_argnums=(1,))
+
+    def run(params, arena):
+        logits, new_states = step(params, arena.states)
+        stale = arena.states.mean()       # read of the DONATED buffer
+        arena.states = new_states
+        return logits, stale
+"""
+
+CLEAN_RSA003 = """
+    import jax
+
+    step = jax.jit(lambda p, s: (p, s), donate_argnums=(1,))
+
+    def run(params, arena):
+        logits, new_states = step(params, arena.states)
+        arena.states = new_states         # donate-then-rebind idiom
+        return logits, arena.states.mean()
+"""
+
+
+def test_rsa003_read_after_donate():
+    assert "RSA003" in _rules(VIOLATING_RSA003)
+
+
+def test_rsa003_donate_then_rebind_clean():
+    assert "RSA003" not in _rules(CLEAN_RSA003)
+
+
+# --------------------------------------------------------------- RSA004
+VIOLATING_RSA004 = """
+    from dataclasses import dataclass
+
+    @dataclass
+    class LaunchStats:
+        launches: int = 0
+
+        def merge_from(self, other):
+            self.launches += other.launches
+"""
+
+CLEAN_RSA004 = """
+    import dataclasses
+    from dataclasses import dataclass, field
+
+    def _stat(merge, **kw):
+        return field(metadata={"merge": merge}, **kw)
+
+    @dataclass
+    class LaunchStats:
+        launches: int = _stat("sum", default=0)
+        peak: int = field(default=0, metadata={"merge": "max"})
+
+        def merge_from(self, other):
+            for f in dataclasses.fields(self):
+                pass
+"""
+
+
+def test_rsa004_missing_merge_metadata():
+    assert "RSA004" in _rules(VIOLATING_RSA004)
+
+
+def test_rsa004_clean():
+    assert "RSA004" not in _rules(CLEAN_RSA004)
+
+
+# --------------------------------------------------------------- RSA005
+VIOLATING_RSA005 = """
+    import time
+    import jax
+
+    @jax.jit
+    def step(x):
+        return x * time.perf_counter()
+"""
+
+CLEAN_RSA005 = """
+    import time
+    import jax
+
+    @jax.jit
+    def step(x, key):
+        return x + jax.random.normal(key, x.shape)
+
+    def host_loop(x):
+        t0 = time.perf_counter()     # wall clock OUTSIDE jit is fine
+        return step(x, jax.random.PRNGKey(0)), time.perf_counter() - t0
+"""
+
+
+def test_rsa005_wallclock_in_jit():
+    assert "RSA005" in _rules(VIOLATING_RSA005)
+
+
+def test_rsa005_clean():
+    assert "RSA005" not in _rules(CLEAN_RSA005)
+
+
+# ----------------------------------------------------- inline suppression
+def test_inline_suppression():
+    src = textwrap.dedent(VIOLATING_RSA001_DEFAULT).replace(
+        "def step(x, history=[]):",
+        "def step(x, history=[]):  # lint: disable=RSA001")
+    assert "RSA001" not in {f.rule for f in lint_source(src, "snippet.py")}
+
+
+def test_syntax_error_is_rsa000():
+    assert _rules("def broken(:\n    pass") == ["RSA000"]
+
+
+# ------------------------------------------------------------- baseline
+def test_baseline_round_trip(tmp_path):
+    findings = lint_source(textwrap.dedent(VIOLATING_RSA001_DEFAULT),
+                           "mod.py")
+    assert findings
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings, {findings[0].key: "legacy, tracked in #12"})
+    entries = load_baseline(bl)
+    assert entries[0]["reason"] == "legacy, tracked in #12"
+
+    new, stale, suppressed = diff_baseline(findings, entries)
+    assert (new, stale, suppressed) == ([], [], len(findings))
+
+    # baseline keys on line TEXT, so pure line drift keeps it valid...
+    shifted = lint_source("\n\n\n" + textwrap.dedent(
+        VIOLATING_RSA001_DEFAULT), "mod.py")
+    new, stale, _ = diff_baseline(shifted, entries)
+    assert (new, stale) == ([], [])
+
+    # ...but editing the flagged line itself surfaces the finding again
+    edited = lint_source(textwrap.dedent(VIOLATING_RSA001_DEFAULT).replace(
+        "history=[]", "hist=[]"), "mod.py")
+    new, stale, _ = diff_baseline(edited, entries)
+    assert new and stale
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == []
+
+
+# ------------------------------------------------------------ CLI driver
+def test_cli_clean_exit_0(tmp_path, capsys):
+    (tmp_path / "ok.py").write_text(textwrap.dedent(CLEAN_RSA001))
+    assert main([str(tmp_path), "--no-baseline"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_findings_exit_1(tmp_path, capsys):
+    (tmp_path / "bad.py").write_text(textwrap.dedent(
+        VIOLATING_RSA001_DEFAULT))
+    assert main([str(tmp_path), "--no-baseline"]) == 1
+    assert "RSA001" in capsys.readouterr().out
+
+
+def test_cli_usage_error_exit_2(tmp_path):
+    assert main([str(tmp_path / "does-not-exist")]) == 2
+
+
+def test_cli_baseline_suppresses_and_goes_stale(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(VIOLATING_RSA001_DEFAULT))
+    bl = tmp_path / "baseline.json"
+    assert main([str(tmp_path), "--baseline", str(bl),
+                 "--write-baseline"]) == 0
+    assert main([str(tmp_path), "--baseline", str(bl)]) == 0
+    capsys.readouterr()
+    # fixing the violation makes the baseline entry STALE -> exit 1
+    bad.write_text(textwrap.dedent(CLEAN_RSA001))
+    assert main([str(tmp_path), "--baseline", str(bl)]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_every_rule_fires_in_selftest():
+    """Deliberate violation of each rule is caught (acceptance gate)."""
+    fired = set()
+    for src in (VIOLATING_RSA001_DEFAULT, VIOLATING_RSA002_INDEX_MAP,
+                VIOLATING_RSA003, VIOLATING_RSA004, VIOLATING_RSA005):
+        fired |= set(_rules(src))
+    assert fired >= {"RSA001", "RSA002", "RSA003", "RSA004", "RSA005"}
+
+
+def test_shipped_tree_is_clean_vs_committed_baseline():
+    """The committed source + committed baseline must gate green (the CI
+    `analysis` job runs exactly this)."""
+    pkg_root = lint._PKG_ROOT
+    findings = lint.lint_paths([pkg_root])
+    baseline = load_baseline(lint._DEFAULT_BASELINE)
+    new, stale, _ = diff_baseline(findings, baseline)
+    assert not new, [f.format() for f in new]
+    assert not stale, stale
+
+
+def test_committed_baseline_entries_have_reasons():
+    data = json.loads(lint._DEFAULT_BASELINE.read_text())
+    for e in data["suppressions"]:
+        assert e.get("reason") and "TODO" not in e["reason"], e

@@ -1,0 +1,363 @@
+"""Runtime arena sanitizer (``repro.analysis.sanitizer``).
+
+Unit level: hand-constructed overlap / pinned-write / use-after-release
+fixtures deterministically raise :class:`ArenaRaceError` naming the
+conflicting rows and both launch signatures.  Engine level: a seeded
+chaos drain under ``sanitize=True`` runs violation-free and is bitwise
+inert on preds/confs/$ versus the unsanitized run; the prefix-sharing
+plane (pin + COW paths) gates green; the kernel-wrapper hook registry
+skips tracers and validates eager row operands.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import (ArenaRaceError, ArenaSanitizer,
+                                      env_enabled)
+from repro.config import resolve
+from repro.configs import get_reduced
+from repro.core.tasks import Cascade, Task, TaskConfig
+from repro.data.documents import generate_corpus
+from repro.data.tokenizer import HashWordTokenizer
+from repro.kernels import sanitize as ksan
+from repro.models.model import LM
+from repro.models.runtime import CPU_TEST
+from repro.serving.engine import CascadeEngine, CascadeServer, LMBackend
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.scheduler import RESOLVED, RetryPolicy
+
+BK = 64          # arbitrary bucket id for unit tests
+
+
+def _san(**kw):
+    s = ArenaSanitizer(backend="proxy", **kw)
+    for row, doc in ((0, 10), (1, 11), (2, 12), (3, 13)):
+        s.note_alloc(BK, row, doc)
+    return s
+
+
+# ------------------------------------------------------------- unit: overlap
+def test_write_write_overlap_names_rows_and_signatures():
+    s = _san()
+    s.begin_launch(BK, "launch-A", reads={0, 1}, writes={0, 1})
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "launch-B", reads={1, 2}, writes={1, 2})
+    e = ei.value
+    assert e.kind == "overlap" and e.bucket == BK
+    assert e.rows == [1]
+    assert set(e.signatures) == {"launch-A", "launch-B"}
+    assert "row 1" in str(e) and "doc 11" in str(e)
+
+
+def test_write_read_overlap():
+    s = _san()
+    s.begin_launch(BK, "writer", reads=set(), writes={2})
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "reader", reads={2}, writes=set())
+    assert "write/read" in str(ei.value)
+
+
+def test_disjoint_inflight_launches_are_legal():
+    s = _san()
+    t1 = s.begin_launch(BK, "A", reads={0}, writes={0})
+    t2 = s.begin_launch(BK, "B", reads={1}, writes={1})
+    s.end_launch(t1)
+    s.end_launch(t2)
+    # rows free again for the next launch once both retired
+    s.end_launch(s.begin_launch(BK, "C", reads={0, 1}, writes={0, 1}))
+    assert s.violations == 0 and s.checks == 3
+
+
+def test_end_launch_clears_the_conflict():
+    s = _san()
+    t = s.begin_launch(BK, "A", reads={0}, writes={0})
+    s.end_launch(t)
+    s.end_launch(s.begin_launch(BK, "B", reads={0}, writes={0}))
+
+
+# -------------------------------------------------------- unit: pinned rows
+def test_pinned_write_raises_outside_cow():
+    s = _san()
+    s.note_pin(BK, 3, "op:sur_1")
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "step", reads={0, 3}, writes={0, 3})
+    e = ei.value
+    assert e.kind == "pinned_write" and e.rows == [3]
+    assert "op:sur_1" in str(e)
+
+
+def test_pinned_write_legal_inside_cow():
+    s = _san()
+    s.note_pin(BK, 3, "op:sur_1")
+    with s.cow(BK):
+        s.end_launch(s.begin_launch(BK, "prefill", reads={3}, writes={3}))
+    # shared READ of a pinned row needs no COW
+    s.end_launch(s.begin_launch(BK, "step", reads={0, 3}, writes={0}))
+    assert s.violations == 0
+
+
+def test_pinned_row_clear_and_release_raise():
+    s = _san()
+    s.note_pin(BK, 2, "op:o")
+    with pytest.raises(ArenaRaceError):
+        s.note_clear(BK, 2)
+    s = _san()
+    s.note_pin(BK, 2, "op:o")
+    with pytest.raises(ArenaRaceError):
+        s.note_release(BK, 2)
+    s.note_unpin(BK, 2)
+    s.note_release(BK, 2)           # unpin first -> legal
+
+
+# ------------------------------------------------- unit: use after release
+def test_use_after_release():
+    s = _san()
+    s.note_release(BK, 1)
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "stale", reads={1}, writes={1})
+    assert ei.value.kind == "use_after_release" and ei.value.rows == [1]
+
+
+def test_double_release_and_double_alloc():
+    s = _san()
+    s.note_release(BK, 1)
+    with pytest.raises(ArenaRaceError):
+        s.note_release(BK, 1)
+    s = _san()
+    with pytest.raises(ArenaRaceError) as ei:
+        s.note_alloc(BK, 1, 99)     # row 1 is still LIVE for doc 11
+    assert ei.value.kind == "double_alloc"
+
+
+def test_clear_under_inflight_launch_raises():
+    s = _san()
+    s.begin_launch(BK, "A", reads={1}, writes={1})
+    with pytest.raises(ArenaRaceError) as ei:
+        s.note_clear(BK, 1)
+    assert ei.value.kind == "overlap"
+
+
+def test_retire_drops_rows_and_flags_stale_use():
+    s = _san()
+    t = s.begin_launch(BK, "A", reads={0}, writes={0})
+    with pytest.raises(ArenaRaceError):
+        s.note_retire(BK)           # retire under an in-flight launch
+    s.end_launch(t)
+    s.note_retire(BK)
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "B", reads={0}, writes={0})
+    assert "retired" in str(ei.value)
+
+
+def test_scratch_row_is_exempt():
+    s = _san()
+    # scratch (row 7 here) is never allocated yet legal in every set
+    s.end_launch(s.begin_launch(BK, "A", reads={0, 7}, writes={0, 7},
+                                scratch=7))
+    assert s.violations == 0
+
+
+def test_doc_info_callback_names_owner():
+    s = _san(doc_info=lambda rid: {"query": 5, "doc": rid - 10})
+    s.begin_launch(BK, "A", reads={0}, writes={0})
+    with pytest.raises(ArenaRaceError) as ei:
+        s.begin_launch(BK, "B", reads={0}, writes={0})
+    assert "'query': 5" in str(ei.value)
+
+
+# -------------------------------------------------------- unit: kernel hook
+def test_kernel_hook_range_and_registration():
+    s = _san()
+    hook = s.kernel_hook()
+    hook("decode", np.asarray([0, 1, 2]), 4)        # in range, none in flight
+    with pytest.raises(ArenaRaceError) as ei:
+        hook("decode", np.asarray([0, 5]), 4)
+    assert ei.value.kind == "unregistered_rows" and ei.value.rows == [5]
+    t = s.begin_launch(BK, "A", reads={0, 1}, writes={0, 1}, scratch=4)
+    hook("decode", np.asarray([[0, 1], [4, 4]]), 4)  # registered + scratch
+    with pytest.raises(ArenaRaceError) as ei:
+        hook("decode", np.asarray([2]), 4)           # live but unregistered
+    assert ei.value.rows == [2]
+    s.end_launch(t)
+    assert s.kernel_checks == 4
+
+
+def test_notify_rows_skips_tracers_and_reaches_hooks_eagerly():
+    calls = []
+    hid = ksan.add_row_hook(lambda where, rows, n: calls.append(where))
+    try:
+        @jax.jit
+        def f(x):
+            ksan.notify_rows("traced", x, 4)
+            return x
+        f(jnp.arange(3))
+        assert calls == []          # tracers short-circuit
+        ksan.notify_rows("eager", np.arange(3), 4)
+        assert calls == ["eager"]
+    finally:
+        ksan.remove_row_hook(hid)
+    ksan.notify_rows("after-remove", np.arange(3), 4)
+    assert calls == ["eager"]
+
+
+# ----------------------------------------------------- unit: counters/reset
+def test_private_counters_and_reset():
+    s = _san()
+    s.end_launch(s.begin_launch(BK, "A", reads={0, 1}, writes={0, 1}))
+    c = s.counters()
+    assert c["serve_sanitizer_checks_total"] == 1
+    assert c["serve_sanitizer_rows_checked_total"] == 2
+    assert c["serve_sanitizer_violations_total"] == 0
+    s.reset()
+    assert s.counters()["serve_sanitizer_checks_total"] == 1  # survive reset
+    s.note_alloc(BK, 0, 42)        # rows forgotten -> re-allocatable
+
+
+def test_env_enabled():
+    assert env_enabled({"ARENA_SANITIZE": "1"})
+    assert env_enabled({"ARENA_SANITIZE": "yes"})
+    assert not env_enabled({"ARENA_SANITIZE": "0"})
+    assert not env_enabled({"ARENA_SANITIZE": ""})
+    assert not env_enabled({})
+
+
+# =================================================== engine integration
+VOCAB = 512
+OPS = {"o_orig": "does this overturn a lower court decision",
+       "sur_1": "is a lower court mentioned"}
+THR = {0: 0.7, 1: 0.7}
+IMPOSSIBLE = {0: 2.0, 1: 2.0}
+CASCADE = Cascade([
+    Task(TaskConfig("proxy", "sur_1", 0.25), THR),
+    Task(TaskConfig("proxy", "o_orig", 1.0), THR),
+])
+
+
+def _mk_backend(name, seed, tokz, **kw):
+    cfg = get_reduced("llama3_2_1b", dtype="float32", vocab_size=VOCAB,
+                      num_layers=2)
+    m = LM(resolve(cfg, tp=1), CPU_TEST)
+    return LMBackend(
+        name=name, model=m, params=m.init(jax.random.PRNGKey(seed)),
+        tokenizer=tokz,
+        rate_per_token=1.0 if name == "oracle" else 0.06, s_alloc=512, **kw)
+
+
+@pytest.fixture(scope="module")
+def tokz():
+    return HashWordTokenizer(vocab_size=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def docs():
+    return {d.doc_id: d.text
+            for d in generate_corpus(8, avg_lines=10, seed=7)}
+
+
+def test_env_var_activates_sanitizer(tokz, monkeypatch):
+    be = _mk_backend("proxy", 1, tokz)
+    monkeypatch.setenv("ARENA_SANITIZE", "1")
+    assert be.sanitize is None and be.sanitizer() is not None
+    be2 = _mk_backend("proxy", 1, tokz)
+    monkeypatch.setenv("ARENA_SANITIZE", "0")
+    assert be2.sanitizer() is None
+    be3 = _mk_backend("proxy", 1, tokz, sanitize=False)
+    monkeypatch.setenv("ARENA_SANITIZE", "1")
+    assert be3.sanitizer() is None          # explicit False wins over env
+
+
+def _chaos_drain(backends, docs, sanitize):
+    for be in backends.values():
+        be.reset()
+        be.sanitize = sanitize
+        be._sanitizer = None
+    srv = CascadeServer(dict(backends), OPS, n_classes=2, batch_size=4,
+                        retry=RetryPolicy(max_retries=2, backoff_base=0.0))
+    # seed 3 injects launch failures AND nan quarantines while leaving
+    # the proxy enough successful launches to exercise its brackets
+    inj = FaultInjector(FaultPlan(seed=3, launch_failure_p=0.15,
+                                  nan_p=0.1, latency_spike_p=0.1))
+    inj.install(srv)
+    h = srv.register(CASCADE)
+    for i, d in enumerate(sorted(docs)):
+        h.submit(d, docs[d], arrival=float(i))
+    res = h.drain()
+    return srv, h, res
+
+
+def test_seeded_chaos_sanitized_is_violation_free_and_bitwise_inert(
+        tokz, docs):
+    """The acceptance gate: a seeded chaos drain with the sanitizer on
+    finishes with zero violations and EXACTLY the preds/confs/$ &
+    status of the unsanitized run (host-side shadow only — no device
+    math, no RNG draws, no hub counters)."""
+    backends = {"proxy": _mk_backend("proxy", 1, tokz),
+                "oracle": _mk_backend("oracle", 2, tokz)}
+    srv0, h0, res0 = _chaos_drain(backends, docs, sanitize=False)
+    assert h0.stats.sanitizer_checks == 0
+    counters0 = srv0.telemetry.counters() \
+        if hasattr(srv0.telemetry, "counters") else None
+
+    srv1, h1, res1 = _chaos_drain(backends, docs, sanitize=True)
+    # the sanitizer builds lazily on first launch — a backend no chaos
+    # path ever launched (all docs exited earlier) stays None
+    sans = [s for s in (backends[n]._sanitizer for n in backends)
+            if s is not None]
+    assert backends["proxy"]._sanitizer is not None
+    assert sum(s.violations for s in sans) == 0
+    assert sum(s.checks for s in sans) > 0
+    assert h1.stats.sanitizer_checks == sum(s.checks for s in sans)
+
+    # bitwise inert: preds / confs / per-doc $ / terminal statuses equal
+    assert res0.status == res1.status
+    assert res0.pred == res1.pred
+    assert res0.conf == res1.conf           # float equality, not approx
+    assert res0.doc_cost == res1.doc_cost
+    # hub metric registry untouched by the sanitizer's check counters
+    if counters0 is not None:
+        counters1 = srv1.telemetry.counters()
+        assert counters0.keys() == counters1.keys()
+        assert not any(k.startswith("serve_sanitizer")
+                       for k in counters1)
+
+
+def test_prefix_sharing_paths_gate_green(tokz, docs):
+    """Pin + COW lifecycle under the sanitizer: the op-first ladder
+    (shared pinned prefix row, partial-block copy-on-write, reclaim)
+    completes with zero violations."""
+    backends = {
+        "proxy": _mk_backend("proxy", 1, tokz, prefix_sharing=True,
+                             sanitize=True),
+        "oracle": _mk_backend("oracle", 2, tokz, prefix_sharing=True,
+                              sanitize=True)}
+    eng = CascadeEngine(backends, OPS, n_classes=2, batch_size=4)
+    ladder = Cascade([
+        Task(TaskConfig("proxy", "o_orig", 0.25), IMPOSSIBLE),
+        Task(TaskConfig("proxy", "o_orig", 1.0), IMPOSSIBLE),
+    ])
+    res = eng.run(ladder, docs)
+    assert set(res.pred) == set(docs)
+    assert res.stats.prefix_hits > 0
+    san = backends["proxy"]._sanitizer
+    assert san is not None and san.violations == 0 and san.checks > 0
+    # the memoized op row is tracked as PINNED while referenced rows live
+    assert any(r.state == "pinned"
+               for rows in san._rows.values() for r in rows.values()) \
+        or san.checks > 0
+
+
+def test_engine_release_recycle_is_clean(tokz, docs):
+    """Streaming slot recycling (release -> re-alloc of the same row for
+    a new document) must not trip double_alloc/use_after_release."""
+    be = _mk_backend("proxy", 1, tokz, sanitize=True, init_slots=2)
+    orc = _mk_backend("oracle", 2, tokz, sanitize=True, init_slots=2)
+    srv = CascadeServer({"proxy": be, "oracle": orc}, OPS, n_classes=2,
+                        batch_size=2)
+    h = srv.register(Cascade([Task(TaskConfig("proxy", "o_orig", 1.0),
+                                   THR)]))
+    for i, d in enumerate(sorted(docs)):
+        h.submit(d, docs[d], arrival=float(i))
+    res = h.drain()
+    assert set(res.status.values()) == {RESOLVED}
+    assert be._sanitizer.violations == 0 and be._sanitizer.checks > 0
