@@ -124,6 +124,19 @@ REQUIRED_TRUE = (
     "telemetry.trace_probe.spans_well_formed",
     "telemetry.trace_probe.no_dropped_events",
     "telemetry.trace_probe.segments_sum_ok",
+    # overlap (ahead-of-time dispatch, ROADMAP item 2): the K-deep
+    # dispatch window must actually be reached (max_inflight >= 2), the
+    # overlap metrics (overlap_hidden_frac, mean_launch_gap_ms) must be
+    # present in the snapshot timeline, and the fault-free plane must be
+    # BITWISE identical to inflight=1 — preds, confs, per-document $,
+    # and every arena device leaf (gap/hidden-fraction values are
+    # wall-clock and intentionally NOT gated)
+    "overlap.max_inflight_ge_2",
+    "overlap.metrics_present",
+    "overlap.parity.pred_match",
+    "overlap.parity.conf_bitwise",
+    "overlap.parity.doc_cost_parity_exact",
+    "overlap.parity.arena_leaves_bitwise",
 )
 
 

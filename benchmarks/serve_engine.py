@@ -87,6 +87,7 @@ import time
 sys.path.insert(0, "src")
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import resolve
@@ -121,6 +122,15 @@ def _model(seed: int):
 # builds (set from ``--kv-dtype``); explicit per-call kwargs win, so the
 # capacity section's fixed arms are immune to the CLI flag.
 _ARENA_KW: dict = {}
+
+# Dispatch-window depth for every ``CascadeServer`` the benchmark builds
+# (set from ``--inflight``).  Overlapped dispatch is bitwise inert on the
+# fault-free plane — preds/confs/per-doc $ and launch schedules are
+# identical at any depth — so the SAME committed gate baseline serves
+# the ``--inflight 4`` CI legs; the telemetry trace probe pins its own
+# depth (its chaos RNG interleaving, and so its exactly-gated structural
+# counts, depend on dispatch/completion order).
+_INFLIGHT: int = 1
 
 
 def make_backends(kind: str, tokz, models, **kw):
@@ -311,7 +321,7 @@ def interactive_replay(eng, cascades, tdocs, order, batch_size: int):
     # (compile caches carry over; arenas reset per session); the k-th
     # tenant's j-th document arrives at tick j for every tenant
     server = CascadeServer(eng.backends, OPS, n_classes=2,
-                           batch_size=batch_size)
+                           batch_size=batch_size, inflight=_INFLIGHT)
     server.reset()
     handles = [server.register(c) for c in cascades]
     for j in range(max(len(o) for o in order)):
@@ -535,13 +545,14 @@ def _accounting_exact(server) -> bool:
                for rid, req in server._requests.items())
 
 
-def _chaos_server(models, tokz, journal=None):
+def _chaos_server(models, tokz, journal=None, inflight=None):
     return CascadeServer(
         make_backends("arena", tokz, models), OPS, n_classes=2,
         batch_size=GATE_BATCH,
         # backoff 0 keeps the launch schedule (and so the fault schedule)
         # a pure function of the chaos seed — no wall-clock in the loop
-        retry=RetryPolicy(max_retries=2, backoff_base=0.0), journal=journal)
+        retry=RetryPolicy(max_retries=2, backoff_base=0.0), journal=journal,
+        inflight=_INFLIGHT if inflight is None else inflight)
 
 
 def _chaos_submit(server, docs):
@@ -811,7 +822,9 @@ def run_capacity_section(tokz, smoke: bool):
 
 def _arena_leaves(backends):
     """Every device leaf of every bucket arena, host-side, in a canonical
-    order — the bitwise fingerprint for the telemetry-inertness probe."""
+    order — the bitwise fingerprint for the telemetry-inertness probe
+    (valid only when both runs share a launch schedule; the overlap
+    section uses ``_capture_releases`` instead)."""
     out = []
     for name in sorted(backends):
         be = backends[name]
@@ -819,6 +832,59 @@ def _arena_leaves(backends):
             for leaf in jax.tree_util.tree_leaves(be._arenas[bucket].states):
                 out.append((name, bucket, np.asarray(leaf)))
     return out
+
+
+def _capture_releases(backends):
+    """Fingerprint every document's arena row at the moment it exits.
+
+    Post-drain arena bytes are NOT comparable across launch schedules:
+    dispatch order at K>1 legally differs from K=1 (the window fills
+    with already-ready cohorts before a completion re-queues escalated
+    docs), so doc->slot assignment permutes AND freed slots are reused
+    in different orders, leaving schedule-dependent stale bytes past
+    each new owner's valid region.  The schedule-independent contract
+    is what a document LEAVES BEHIND: wrap ``release`` to snapshot the
+    departing doc's valid KV window ``[0, cached_len)`` (its slot is
+    still owned here, and eviction drains conflicting tickets before
+    releasing, so no open ticket can be writing the row).  Returns the
+    store, filled as ``(backend, bucket, doc) -> [(cached_len,
+    true_len, bytes), ...]`` (a list: an evicted doc releases once per
+    preemption plus once at exit)."""
+    store = {}
+    for nm in sorted(backends):
+        be = backends[nm]
+        orig = be.release
+
+        def release(doc_id, be=be, orig=orig, nm=nm):
+            bs = be._doc_slot.get(doc_id)
+            if bs is not None:
+                bucket, slot = bs
+                ar = be._arenas.get(bucket)
+                if ar is not None:
+                    c = int(ar.cached_len[slot])
+                    t = int(ar.true_len[slot])
+                    if c == 0:
+                        body = b""
+                    elif be.model.supports_paged_kv:
+                        win = be.model.take_kv_window(
+                            ar.states, jnp.asarray([slot], jnp.int32),
+                            jnp.asarray([0], jnp.int32), c)
+                        body = b"".join(np.asarray(leaf).tobytes()
+                                        for leaf in jax.tree.leaves(win))
+                    else:       # no seq-axis contract: full row, best-effort
+                        flat, _ = jax.tree_util.tree_flatten_with_path(
+                            ar.states)
+                        body = b"".join(
+                            np.take(np.asarray(leaf), slot,
+                                    axis=ar.model._state_batch_axis(path)
+                                    ).tobytes()
+                            for path, leaf in flat)
+                    store.setdefault((nm, bucket, doc_id), []).append(
+                        (c, t, body))
+            orig(doc_id)
+
+        be.release = release
+    return store
 
 
 def run_telemetry_section(models, tokz, trace_out=None):
@@ -867,7 +933,11 @@ def run_telemetry_section(models, tokz, trace_out=None):
     chaos_docs = {d.doc_id: d.text
                   for d in generate_corpus(CHAOS_DOCS, avg_lines=12,
                                            seed=GATE_SEED)}
-    server = _chaos_server(models, tokz)
+    # depth pinned at 1: at K>1 the injector draws at dispatch order but
+    # picks NaN victims at completion order, so the fault schedule — and
+    # with it these exactly-gated structural counts — would depend on
+    # ``--inflight`` (the overlap section and the chaos legs cover K>1)
+    server = _chaos_server(models, tokz, inflight=1)
     server.telemetry.level = "trace"
     plan = FaultPlan(seed=CHAOS_SEED, launch_failure_p=0.25, nan_p=0.15,
                      latency_spike_p=0.1, spike_s=1e-4, arena_loss_at=4)
@@ -911,6 +981,83 @@ def run_telemetry_section(models, tokz, trace_out=None):
     return section
 
 
+def run_overlap_section(models, tokz, inflight: int):
+    """Overlapped ahead-of-time dispatch gate (ROADMAP item 2).
+
+    Replays the multi-tenant interactive workload on FRESH backends at
+    ``inflight=1`` and ``inflight=K`` (K >= 2 even when the smoke runs
+    unflagged, so the overlap machinery is always exercised) and checks
+    the contract: ahead-of-time dispatch may only change WHEN the host
+    blocks, never what it computes — preds, confs, per-document $ and
+    the arena row content every document leaves behind must be BITWISE
+    identical (release-time capture; ``_capture_releases`` documents
+    why post-drain leaves are not comparable) — while the K
+    run must actually reach a dispatch-window depth >= 2 and publish the
+    overlap metrics CI tracks.  The booleans are REQUIRED_TRUE in
+    ``check_regression.py``; the overlap economics (gap, hidden
+    fraction) are wall-clock and reported, never gated.
+    """
+    k = max(2, int(inflight))
+    docs = {d.doc_id: d.text
+            for d in generate_corpus(GATE_DOCS, avg_lines=12,
+                                     seed=GATE_SEED)}
+    cascades = tenant_cascades(GATE_TENANTS)
+    tdocs, order = _tenant_split(docs, GATE_TENANTS)
+    runs = {}
+    for depth in (1, k):
+        eng, backends = make_engine("arena", tokz, models, GATE_BATCH)
+        captured = _capture_releases(backends)
+        server = CascadeServer(eng.backends, OPS, n_classes=2,
+                               batch_size=GATE_BATCH, inflight=depth)
+        handles = [server.register(c) for c in cascades]
+        for j in range(max(len(o) for o in order)):
+            for t in range(GATE_TENANTS):
+                if j < len(order[t]):
+                    handles[t].submit(order[t][j], tdocs[t][order[t][j]],
+                                      arrival=float(j))
+            while server.pending():
+                server.step()
+        out = server.drain()
+        runs[depth] = {"results": [out[h.query_id] for h in handles],
+                       "rows": captured,
+                       "snap": server.telemetry_snapshot()}
+    r1, rk = runs[1]["results"], runs[k]["results"]
+    l1, lk = runs[1]["rows"], runs[k]["rows"]
+    tl1, tlk = runs[1]["snap"]["timeline"], runs[k]["snap"]["timeline"]
+    parity = {
+        "pred_match": all(a.pred == b.pred for a, b in zip(r1, rk)),
+        "conf_bitwise": all(a.conf == b.conf for a, b in zip(r1, rk)),
+        "doc_cost_parity_exact": all(a.doc_cost == b.doc_cost
+                                     for a, b in zip(r1, rk)),
+        # release-time row fingerprints, keyed (backend, bucket, doc):
+        # the KV bytes each doc leaves behind, bitwise (see
+        # _capture_releases for why post-drain leaves can't be compared)
+        "arena_leaves_bitwise": bool(l1) and l1 == lk,
+    }
+    section = {
+        "inflight": k,
+        "max_inflight": int(runs[k]["snap"]["server"]["max_inflight"]),
+        "max_inflight_ge_2":
+            int(runs[k]["snap"]["server"]["max_inflight"]) >= 2,
+        "metrics_present": ("overlap_hidden_frac" in tlk
+                            and "mean_launch_gap_ms" in tlk),
+        "parity": parity,
+        # wall-clock overlap economics (artifact trajectories, NOT gated)
+        "timings": {
+            "mean_launch_gap_ms_inflight1": tl1["mean_launch_gap_ms"],
+            "mean_launch_gap_ms": tlk["mean_launch_gap_ms"],
+            "overlap_hidden_frac_inflight1": tl1["overlap_hidden_frac"],
+            "overlap_hidden_frac": tlk["overlap_hidden_frac"],
+            "inflight_s": tlk["inflight_s"],
+            "device_s": tlk["device_s"],
+        },
+    }
+    assert section["max_inflight_ge_2"], runs[k]["snap"]["server"]
+    assert section["metrics_present"], sorted(tlk)
+    assert all(parity.values()), parity
+    return section
+
+
 # ---------------------------------------------------------------------------
 # Deterministic smoke-gate summary (CI benchmark-regression gate)
 # ---------------------------------------------------------------------------
@@ -924,7 +1071,7 @@ GATE_TENANTS = 2
 
 
 def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED,
-                       trace_out=None):
+                       trace_out=None, inflight: int = 1):
     """Timing-free, machine-comparable summary for the CI regression gate.
 
     Every metric here is DETERMINISTIC for a given source tree: corpora
@@ -1017,8 +1164,13 @@ def smoke_gate_summary(parity=None, chaos_seed: int = CHAOS_SEED,
     # structural counts are exactly gateable whatever --chaos-seed is)
     telemetry = run_telemetry_section(models, tokz, trace_out=trace_out)
 
+    # -- overlap: ahead-of-time dispatch parity + depth/metric gates
+    # (fresh backends per arm; runs at K >= 2 regardless of --inflight)
+    overlap = run_overlap_section(models, tokz, inflight)
+
     return {"static": static, "multi_tenant": multi_tenant, "paged": paged,
             "capacity": capacity, "chaos": chaos, "telemetry": telemetry,
+            "overlap": overlap,
             "constants": {"docs": GATE_DOCS, "batch": GATE_BATCH,
                           "seed": GATE_SEED, "tenants": GATE_TENANTS}}
 
@@ -1054,6 +1206,13 @@ def main():
                          "same committed gate baseline applies to both "
                          "legs (the capacity section pins its own arm "
                          "dtypes and is immune to this flag)")
+    ap.add_argument("--inflight", type=int, default=1,
+                    help="dispatch-window depth for every CascadeServer "
+                         "the benchmark builds (JAX async dispatch keeps "
+                         "up to K launches in flight); fault-free "
+                         "results are bitwise identical at any depth, "
+                         "so the committed gate baseline applies to the "
+                         "--inflight CI legs unchanged")
     ap.add_argument("--chaos-only", action="store_true",
                     help="run ONLY the chaos section (fast CI job): "
                          "asserts all-docs-terminal + exact accounting "
@@ -1069,6 +1228,8 @@ def main():
         args.batch_size = min(args.batch_size, 4)
     if args.kv_dtype == "bf16":
         _ARENA_KW["kv_dtype"] = "bfloat16"
+    global _INFLIGHT
+    _INFLIGHT = max(1, args.inflight)
 
     tokz = HashWordTokenizer(vocab_size=512)
     models = {"proxy": _model(1), "oracle": _model(2)}
@@ -1172,7 +1333,8 @@ def main():
     print("== smoke gate (deterministic summary) ==", flush=True)
     report["smoke"] = smoke_gate_summary(parity=report["paged"]["parity"],
                                          chaos_seed=args.chaos_seed,
-                                         trace_out=args.trace_out)
+                                         trace_out=args.trace_out,
+                                         inflight=_INFLIGHT)
     print(json.dumps(report["smoke"], indent=2), flush=True)
 
     if args.smoke:
@@ -1214,6 +1376,12 @@ def main():
         assert tel["trace_probe"]["spans_well_formed"]
         assert tel["trace_probe"]["no_dropped_events"]
         assert tel["trace_probe"]["segments_sum_ok"]
+        # overlap (ahead-of-time dispatch): window depth actually reached,
+        # overlap metrics published, bitwise parity vs inflight=1
+        # (run_overlap_section asserts these too)
+        ov = report["smoke"]["overlap"]
+        assert ov["max_inflight_ge_2"] and ov["metrics_present"]
+        assert all(ov["parity"].values())
         gate = {"smoke": report["smoke"],
                 "backend": report["backend"],
                 "generated_by": "benchmarks/serve_engine.py --smoke"}

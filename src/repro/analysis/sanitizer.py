@@ -107,6 +107,7 @@ class ArenaSanitizer:
     rows_checked: int = 0           # row memberships validated (cumulative)
     kernel_checks: int = 0          # eager kernel-wrapper row sets validated
     violations: int = 0
+    inflight_peak: int = 0          # max simultaneously-open brackets seen
     _rows: Dict[int, Dict[int, _Row]] = field(default_factory=dict)
     _retired: Set[int] = field(default_factory=set)
     _inflight: Dict[int, _Ticket] = field(default_factory=dict)
@@ -130,6 +131,7 @@ class ArenaSanitizer:
             "serve_sanitizer_rows_checked_total": self.rows_checked,
             "serve_sanitizer_kernel_checks_total": self.kernel_checks,
             "serve_sanitizer_violations_total": self.violations,
+            "serve_sanitizer_inflight_peak": self.inflight_peak,
         }
 
     def _bucket(self, bucket: int) -> Dict[int, _Row]:
@@ -291,6 +293,8 @@ class ArenaSanitizer:
         ticket = _Ticket(self._next_launch, bucket, signature, rd, w, scratch)
         self._next_launch += 1
         self._inflight[ticket.launch_id] = ticket
+        if len(self._inflight) > self.inflight_peak:
+            self.inflight_peak = len(self._inflight)
         return ticket
 
     def end_launch(self, ticket: _Ticket) -> None:

@@ -57,6 +57,22 @@ def bandwidth_utilization(bytes_moved: float, seconds: float,
     return (float(bytes_moved) / float(seconds)) / bw
 
 
+def overlap_hidden_fraction(hidden_s: float, exposed_s: float) -> float:
+    """Fraction of device time hidden behind host work by ahead-of-time
+    dispatch: ``hidden / (hidden + exposed)``.
+
+    ``hidden_s`` is the summed in-flight window (dispatch returned, sync
+    not yet entered — the device computing while the host schedules
+    other launches) and ``exposed_s`` the summed ``block_until_ready``
+    waits the host actually paid.  0.0 at ``inflight=1`` (nothing
+    overlaps), → 1.0 when completion never blocks.  Returns 0.0 when
+    both terms are ~0 (no launches)."""
+    total = float(hidden_s) + float(exposed_s)
+    if total <= 0.0:
+        return 0.0
+    return float(hidden_s) / total
+
+
 def logical_param_counts(arch: str) -> Dict[str, float]:
     """(total, active) parameter counts from the UNPADDED architecture."""
     cfg = get_config(arch)

@@ -283,6 +283,41 @@ def _pad_width(n: int) -> int:
 
 
 @dataclass
+class GroupTicket:
+    """One in-flight stage launch: the non-blocking ``dispatch_group``
+    half returns this; ``complete_group`` consumes it.
+
+    ``logits``/``states`` are device FUTURES (JAX async dispatch) — the
+    jitted step has been enqueued but nothing has been waited on.  The
+    sanitizer bracket (``san_ticket``) stays OPEN across the ticket's
+    lifetime, so any structural arena operation (clear/release/retire)
+    that touches the ticket's rows while it is in flight raises
+    ``ArenaRaceError`` — exactly the race the brackets were built to
+    audit.  Host-side billing metadata (``new_d``/``cached_d``/
+    ``op_len``) and structural traffic (``copy_bytes``/``hbm_bytes``)
+    are captured at dispatch so concurrent tickets never race on backend
+    scratch attributes."""
+
+    ids: List[int]
+    bucket: int
+    n_classes: int
+    logits: Any                      # device future [Bp, vocab]
+    states: Any                      # device future (arena pytree)
+    new_d: np.ndarray                # per-doc new true tokens
+    cached_d: np.ndarray             # per-doc cached true tokens
+    op_len: int                      # billed op suffix (P on prefix plane)
+    san: Any                         # ArenaSanitizer or None
+    san_ticket: Any                  # open begin_launch bracket (or None)
+    timing: Dict[str, float]         # host/dispatch at dispatch; +device
+    ts_enqueue: float                # jit call began (dispatch segment)
+    ts_dispatched: float             # dispatch_group returned control
+    copy_bytes: int
+    hbm_bytes: Optional[float]
+    ts_sync: float = 0.0             # block_until_ready entered
+    ts_ready: float = 0.0            # device results host-visible
+
+
+@dataclass
 class LMBackend:
     """A model + params behind the server, with a slot-based KV arena."""
 
@@ -905,13 +940,19 @@ class LMBackend:
             f"op prefix pads to {p_eff} > op_reserve ({self.op_reserve})"
         return p_eff
 
-    def _run_group_prefix(self, ids, doc_tokens, bucket, f_len, fraction,
-                          eff_c, op_tokens, n_classes, op_key):
-        """Prefix-sharing twin of the standard ``run_group`` body: op-first
-        layout, block-table indirection, memoized op prefill, one readout
-        decode instead of a per-launch op-suffix decode loop (and hence
-        zero undo-log bytes for the op suffix — only the width-1 readout
-        window is saved/restored, inside the step).
+    def _dispatch_group_prefix(self, ids, doc_tokens, bucket, f_len,
+                               fraction, eff_c, op_tokens, n_classes,
+                               op_key):
+        """Prefix-sharing twin of the standard ``dispatch_group`` body:
+        op-first layout, block-table indirection, memoized op prefill,
+        one readout decode instead of a per-launch op-suffix decode loop
+        (and hence zero undo-log bytes for the op suffix — only the
+        width-1 readout window is saved/restored, inside the step).
+        Returns a ``GroupTicket`` with its sanitizer bracket open; the
+        attach-time COW copy and any first-touch op prefill close their
+        own brackets here at dispatch (they touch only the shared row
+        plus this launch's fresh private rows — disjoint from every
+        other open ticket's write set).
 
         Billing is IDENTICAL to the standard plane — ``new_d = doc
         segment + op_len`` per document — because $ follows the token
@@ -1042,27 +1083,31 @@ class LMBackend:
                 jnp.asarray(last_tok),
                 jnp.asarray(kv_true), jnp.asarray(ext_true),
                 c_len=eff_c, p_len=p_eff)
-            arena.states = new_states
-            t3 = time.perf_counter()
-            self.host_overhead_s += t3 - t2    # async dispatch
-            jax.block_until_ready((logits, new_states))
-        finally:
+        except BaseException:
             if san is not None:
                 san.end_launch(ticket)
-        t4 = time.perf_counter()
-        self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
-                            "device": t4 - t3}
+            raise
+        # RSA003-verified rebind: with donation on, the step consumed the
+        # old arena buffers; the arena now holds the result FUTURE, so a
+        # later launch on this arena chains through it (device-ordered)
+        arena.states = new_states
+        t3 = time.perf_counter()
+        self.host_overhead_s += t3 - t2    # async dispatch
         # undo log here is the width-1 readout window, not the op suffix
         self._note_launch_traffic(bucket, B, 1, n_new, kv_true)
-
         if n_new > 0:
             for i, d in enumerate(ids):
                 slot = slots[i]
                 arena.cached_len[slot] = f_len
                 arena.true_len[slot] = min(f_len, len(doc_tokens[d]))
-        pred, conf = self.class_confidences(
-            np.asarray(logits)[:B], n_classes)
-        return pred, conf, new_d + P, cached_d
+        return GroupTicket(
+            ids=list(ids), bucket=bucket, n_classes=n_classes,
+            logits=logits, states=new_states, new_d=new_d,
+            cached_d=cached_d, op_len=P, san=san, san_ticket=ticket,
+            timing={"host": t1 - t0, "dispatch": t3 - t2},
+            ts_enqueue=t2, ts_dispatched=t3,
+            copy_bytes=self.last_copy_bytes,
+            hbm_bytes=self.last_hbm_bytes)
 
     # ----------------------------------------------------- paged accounting
     def gather_bytes_per_launch(self, bucket: int, batch: int) -> int:
@@ -1143,6 +1188,28 @@ class LMBackend:
         attribute cost to each document's own stage and query even when a
         launch mixes stages or registered queries.
 
+        Synchronous composition of the overlapped halves —
+        ``complete_group(dispatch_group(...))`` with exactly one ticket
+        in flight, bitwise the pre-split behavior.  The server's
+        ahead-of-time dispatch loop calls the halves directly to keep up
+        to K tickets open.
+        """
+        return self.complete_group(self.dispatch_group(
+            ids, doc_tokens, bucket, f_len, fraction, eff_c, op_tokens,
+            n_classes, op_id=op_id))
+
+    def dispatch_group(self, ids, doc_tokens, bucket, f_len, fraction,
+                       eff_c, op_tokens, n_classes,
+                       op_id: Optional[str] = None) -> GroupTicket:
+        """Non-blocking half of ``run_group``: pick slots, assemble the
+        launch arrays, enqueue the jitted stage step (JAX async dispatch
+        — control returns while the device works), and hand back a
+        ``GroupTicket`` whose sanitizer bracket stays OPEN until
+        ``complete_group``.  Every piece of host bookkeeping that does
+        not depend on device results — billing token counts,
+        cached-length advances, structural traffic — happens here, so
+        completion only waits and reads out.
+
         ``op_id`` names the operation for the prefix-sharing memo; callers
         that don't thread one get a content-derived key (same tokens ==
         same prefix row either way).
@@ -1150,9 +1217,10 @@ class LMBackend:
         if self.prefix_sharing:
             op_key = op_id if op_id is not None else \
                 "op:" + ",".join(str(int(t)) for t in op_tokens)
-            return self._run_group_prefix(ids, doc_tokens, bucket, f_len,
-                                          fraction, eff_c, op_tokens,
-                                          n_classes, op_key)
+            return self._dispatch_group_prefix(ids, doc_tokens, bucket,
+                                               f_len, fraction, eff_c,
+                                               op_tokens, n_classes,
+                                               op_key)
         assert len(op_tokens) > 0, "operations must encode to >= 1 token"
         assert len(op_tokens) <= self.op_reserve, \
             f"operation longer than op_reserve ({len(op_tokens)})"
@@ -1203,29 +1271,61 @@ class LMBackend:
                 jnp.asarray(new_tok), jnp.asarray(op_tokens, jnp.int32),
                 jnp.asarray(kv_true), jnp.asarray(ext_true),
                 c_len=eff_c, op_len=op_len)
-            arena.states = new_states
-            t3 = time.perf_counter()
-            self.host_overhead_s += t3 - t2    # async dispatch
-            # device segment: wait out the step here (host-side sync only —
-            # the np.asarray readout below then costs nothing extra) so the
-            # timeline can split dispatch from device wall time
-            jax.block_until_ready((logits, new_states))
-        finally:
+        except BaseException:
             if san is not None:
                 san.end_launch(ticket)
-        t4 = time.perf_counter()
-        self.last_timing = {"host": t1 - t0, "dispatch": t3 - t2,
-                            "device": t4 - t3}
+            raise
+        # RSA003-verified rebind: with donation on, the step consumed the
+        # old arena buffers; the arena now holds the result FUTURE, so a
+        # later launch on this arena chains through it (device-ordered)
+        arena.states = new_states
+        t3 = time.perf_counter()
+        self.host_overhead_s += t3 - t2    # async dispatch
         self._note_launch_traffic(bucket, B, op_len, n_new, kv_true)
-
         if n_new > 0:
             for i, d in enumerate(ids):
                 slot = slots[i]
                 arena.cached_len[slot] = f_len
                 arena.true_len[slot] = min(f_len, len(doc_tokens[d]))
+        return GroupTicket(
+            ids=list(ids), bucket=bucket, n_classes=n_classes,
+            logits=logits, states=new_states, new_d=new_d,
+            cached_d=cached_d, op_len=op_len, san=san, san_ticket=ticket,
+            timing={"host": t1 - t0, "dispatch": t3 - t2},
+            ts_enqueue=t2, ts_dispatched=t3,
+            copy_bytes=self.last_copy_bytes,
+            hbm_bytes=self.last_hbm_bytes)
+
+    def complete_group(self, ticket: GroupTicket):
+        """Blocking half of ``run_group``: wait out the ticket's device
+        work, close its sanitizer bracket, and read out the routing
+        confidences.
+
+        Blocks on the LOGITS only: with buffer donation on, a later
+        launch chained onto the same arena consumes the ticket's
+        ``states`` buffers, so waiting on them would touch donated
+        storage — while the logits are never donated and their readiness
+        implies the whole step (arena writes included) retired.  The
+        bracket closes in ``finally`` so a device-side error surfacing
+        at sync still releases the ticket's rows."""
+        t0 = time.perf_counter()
+        ticket.ts_sync = t0
+        try:
+            # device segment: wait out the step here (host-side sync only
+            # — the np.asarray readout below then costs nothing extra) so
+            # the timeline can split dispatch/in-flight from device wait
+            jax.block_until_ready(ticket.logits)
+        finally:
+            if ticket.san is not None:
+                ticket.san.end_launch(ticket.san_ticket)
+        t1 = time.perf_counter()
+        ticket.ts_ready = t1
+        ticket.timing["device"] = t1 - t0
+        self.last_timing = dict(ticket.timing)
+        B = len(ticket.ids)
         pred, conf = self.class_confidences(
-            np.asarray(logits)[:B], n_classes)
-        return pred, conf, new_d + op_len, cached_d
+            np.asarray(ticket.logits)[:B], ticket.n_classes)
+        return pred, conf, ticket.new_d + ticket.op_len, ticket.cached_d
 
     @staticmethod
     def _true_len(toks: np.ndarray, fraction: float) -> int:
@@ -1401,6 +1501,22 @@ class QueryHandle:
 
 
 @dataclass
+class _Flight:
+    """One dispatched-but-uncompleted launch in the server's ahead-of-time
+    dispatch window.  ``group`` is the backend's ``GroupTicket`` (None
+    only on the failed-dispatch record path); ``attempt`` pins the
+    attempt index at dispatch time so timeline records stay dense even
+    though ``_attempts`` advances past the flight before it completes."""
+
+    launch: LaunchSpec
+    be: Any
+    group: Any
+    attempt: int
+    t_begin: float
+    t_sched: float
+
+
+@dataclass
 class CascadeServer:
     """Long-lived multi-tenant executor of task cascades over shared
     backends.
@@ -1429,6 +1545,16 @@ class CascadeServer:
     # identical at every level.
     telemetry: Telemetry = field(default_factory=Telemetry, repr=False)
     idle_wait_cap: float = 0.25      # max seconds one _idle_wait sleeps
+    # Overlapped ahead-of-time dispatch: keep up to ``inflight`` launches
+    # enqueued on the device before blocking for the oldest one's routing
+    # confidences.  1 (default) is bitwise the pre-overlap behavior; K>1
+    # hides scheduler/host bookkeeping behind device compute.  Safe by
+    # construction: in-flight documents are out of the ready queue (so
+    # concurrent launches own disjoint arena rows), the scheduler vetoes
+    # groups that would touch rows open tickets own, and every structural
+    # path (eviction, arena loss, reset) drains conflicting tickets first
+    # — with the sanitizer's open brackets auditing exactly that.
+    inflight: int = 1
     _op_tok_cache: Dict[Tuple[str, str], np.ndarray] = field(
         default_factory=dict, repr=False)
     # ---- serving state (shared queue; per-query partitions keyed by qid)
@@ -1446,6 +1572,8 @@ class CascadeServer:
     _pending: Dict[int, int] = field(default_factory=dict, repr=False)
     _launches: int = field(default=0, repr=False)
     _retired: int = field(default=0, repr=False)
+    _flights: List[_Flight] = field(default_factory=list, repr=False)
+    _max_inflight_seen: int = field(default=0, repr=False)
     _seq: int = field(default=0, repr=False)
     _next_qid: int = field(default=0, repr=False)
     # ---- fault-tolerance state
@@ -1495,6 +1623,8 @@ class CascadeServer:
         Compiled stage steps and op-token memos survive (they close over
         models and operation text only).
         """
+        assert not self._flights, \
+            "reset with launches in flight; drain them first"
         for be in self.backends.values():
             be.reset()
         self._queue.clear()
@@ -1509,6 +1639,7 @@ class CascadeServer:
         self._pending.clear()
         self._launches = 0
         self._retired = 0
+        self._max_inflight_seen = 0
         self._seq = 0
         self._next_qid = 0
         self._health.clear()
@@ -1628,9 +1759,14 @@ class CascadeServer:
         return DocFuture(query_id=qid, doc_id=doc_id, _req=req, _server=self)
 
     def pending(self, query_id: Optional[int] = None) -> int:
-        """Documents admitted but not yet resolved (one query, or all)."""
+        """Documents admitted but not yet resolved (one query, or all).
+
+        Counts documents riding in-flight launches too — drain loops
+        must keep stepping until every open ticket has completed, not
+        just until the ready queue empties."""
         if query_id is None:
-            return len(self._queue)
+            return (len(self._queue)
+                    + sum(len(f.launch.doc_ids) for f in self._flights))
         return self._pending.get(query_id, 0)
 
     # ------------------------------------------------------------ scheduling
@@ -1641,9 +1777,14 @@ class CascadeServer:
     def _victim_order(self, be, protected: Set[int]) -> List[int]:
         """Eviction priority, lowest first: fewest-cached-tokens-lost,
         newest arrival breaking ties (two stable sorts, reversed-arrival
-        first)."""
+        first).  Documents riding open tickets are never victims — the
+        dispatch loop drains conflicting flights before evicting, and
+        this filter is the belt-and-braces guarantee the sanitizer's
+        open brackets would otherwise turn into an ``ArenaRaceError``."""
+        inflight = {d for f in self._flights for d in f.launch.doc_ids}
         victims = sorted(
-            (d for d in be.live_docs() if d not in protected),
+            (d for d in be.live_docs()
+             if d not in protected and d not in inflight),
             key=lambda d: self._requests[d].key(), reverse=True)
         victims.sort(key=be.true_cached_len)
         return victims
@@ -1719,57 +1860,146 @@ class CascadeServer:
             st.retired_buckets += n
 
     def step(self) -> List[Tuple[int, int]]:
-        """Dispatch one launch from the shared ready queue.
+        """Fill the dispatch window, then complete the oldest launch.
 
-        The launch may mix documents from several registered queries
-        (same static signature).  Returns the ``(query_id, doc_id)``
-        pairs that reached a TERMINAL state this step (resolved, failed,
-        or timed out; may be empty).  No-op when idle.  A failed launch
-        never raises out of ``step``: its documents are re-enqueued solo
-        with backoff (or finished FAILED/TIMED_OUT past their retry/
-        deadline budgets) — see the module docstring's failure model.
+        Ahead-of-time dispatch: up to ``inflight`` launches are enqueued
+        non-blocking (``dispatch_group`` returns a ticket while the
+        device works), then exactly one — the oldest — is completed,
+        because the scheduler needs ITS confidences to route its
+        documents' next stages.  At ``inflight=1`` this is bitwise the
+        classic dispatch-then-block step.  Launches may mix documents
+        from several registered queries (same static signature).
+        Returns the ``(query_id, doc_id)`` pairs that reached a TERMINAL
+        state this step (may be empty).  No-op when idle.  A failed
+        launch never raises out of ``step``: its documents are
+        re-enqueued solo with backoff (or finished FAILED/TIMED_OUT past
+        their retry/deadline budgets) — see the module docstring's
+        failure model.
 
-        Telemetry: each dispatched launch's wall time decomposes into
-        scheduler-pick / host-bookkeeping / dispatch / block_until_ready
-        segments (disjoint by construction — dispatch and device are
-        measured directly around the jitted step, host is the residual),
-        recorded as a ``LaunchRecord`` on the server's timeline.
+        Telemetry: each launch's wall time decomposes into
+        scheduler-pick / host / dispatch / device segments (host is the
+        residual, so the four sum to the record's wall clock exactly);
+        overlapped launches additionally stamp their in-flight window
+        (``inflight_s``) — see ``serving/telemetry.py``.
         """
-        tm = self.telemetry
         t_begin = now = time.perf_counter()
         terminal: List[Tuple[int, int]] = []
         for req in self._queue.pop_expired(now):    # deadline beats backoff
             self._finish(req, TIMED_OUT, now, error="deadline exceeded")
             terminal.append((req.query_id, req.ext_id))
         self._reroute_sick()
-        launch = self._queue.next_launch(self._stage_of, self.batch_size,
-                                         policy=self.policy, now=now)
-        t_sched = time.perf_counter()
-        if launch is None:
-            self._note_progress(bool(terminal))
-            return terminal
-        be = self.backends[launch.model]
-        launch = self._make_room(be, launch)
+        k = max(int(self.inflight), 1)
+        dispatched = False
+        while len(self._flights) < k:
+            # the first pick reuses the step-entry stamp (inflight=1 parity:
+            # sched_s measures queue grouping, not work done meanwhile)
+            t_pick = time.perf_counter() if dispatched else t_begin
+            launch = self._queue.next_launch(
+                self._stage_of, self.batch_size, policy=self.policy,
+                now=t_pick,
+                blocked=self._inflight_blocked if self._flights else None)
+            t_sched = time.perf_counter()
+            if launch is None:
+                break
+            be = self.backends[launch.model]
+            if self._flights and self._room_needed(be, launch):
+                # eviction releases rows open tickets may still read or
+                # write: drain every in-flight launch before making room
+                self._complete_flights(terminal)
+            launch = self._make_room(be, launch)
+            self._attempts += 1
+            fl = _Flight(launch=launch, be=be, group=None,
+                         attempt=self._attempts - 1, t_begin=t_pick,
+                         t_sched=t_sched)
+            try:
+                fl.group = be.dispatch_group(
+                    list(launch.doc_ids), self._tok[launch.model],
+                    launch.bucket, launch.f_len, launch.fraction,
+                    launch.cached_len, self._op_tokens(be, launch.op_id),
+                    self.n_classes, op_id=launch.op_id)
+            except Exception as exc:    # noqa: BLE001 — isolate the launch
+                # fresh stamp: retry/terminal events must postdate any
+                # fault events the injector recorded DURING the failed
+                # launch (and the retry backoff anchors at the failure)
+                self._on_launch_failure(launch, exc, time.perf_counter(),
+                                        terminal)
+                self._record_flight(fl, ok=False, error=str(exc))
+                self._note_progress(True)
+                return terminal
+            self._flights.append(fl)
+            dispatched = True
+            self._max_inflight_seen = max(self._max_inflight_seen,
+                                          len(self._flights))
+        if self._flights:
+            self._complete_one(terminal)
+            self._note_progress(True)
+        else:
+            self._note_progress(bool(terminal) or dispatched)
+        return terminal
+
+    def _inflight_blocked(self, key) -> bool:
+        """Scheduler veto for overlapped dispatch: True if co-scheduling
+        this signature group next to the OPEN tickets could touch rows a
+        ticket owns.  Documents in flight are already out of the ready
+        set, so distinct launches hold disjoint private rows by
+        construction; the shared surface is the prefix-sharing plane's
+        pinned op row — a FIRST-TOUCH prefill writes that row, so a
+        group needing one is held back until the bucket's open tickets
+        (which read the row's bucket arena) complete.  Attaching to an
+        existing row is a shared read and co-schedules freely."""
+        model, op_id, blen = key[0], key[1], key[3]
+        be = self.backends[model]
+        if not getattr(be, "prefix_sharing", False):
+            return False
+        if not any(f.launch.model == model and f.launch.bucket == blen
+                   for f in self._flights):
+            return False
+        return bool(be.prefix_slot_needed(blen, op_id))
+
+    def _room_needed(self, be, launch: LaunchSpec) -> bool:
+        """Whether ``_make_room`` would have to evict for this launch
+        (same budget arithmetic, zero side effects) — the dispatch loop
+        drains open tickets first when it would."""
+        if (getattr(be, "slot_budget", None) is None
+                and getattr(be, "byte_budget", None) is None):
+            return False
+        extra = 1 if (hasattr(be, "prefix_slot_needed")
+                      and be.prefix_slot_needed(launch.bucket, launch.op_id)
+                      ) else 0
+        need = sum(1 for d in launch.doc_ids if not be.has_slot(d)) + extra
+        return bool(be.over_budget(launch.bucket, need))
+
+    def _complete_flights(self, terminal: List[Tuple[int, int]]) -> None:
+        """Drain every in-flight launch (FIFO) ahead of a structural
+        operation that could touch open tickets' rows (eviction, arena
+        loss)."""
+        while self._flights:
+            self._complete_one(terminal)
+
+    def _complete_one(self, terminal: List[Tuple[int, int]]) -> None:
+        """Complete the OLDEST in-flight launch and route its documents.
+
+        FIFO completion keeps billing-ledger order a pure function of
+        dispatch order.  Dispatch order itself may legally differ from
+        ``inflight=1`` — the window fills with already-ready cohorts
+        before a completion re-queues escalated documents — but every
+        document still runs exactly its stage ladder, so per-document
+        preds/confs/$ (and the arena state they leave behind) are
+        bitwise schedule-independent."""
+        tm = self.telemetry
+        fl = self._flights.pop(0)
+        launch, be = fl.launch, fl.be
         ids = list(launch.doc_ids)
-        launch_idx = self._launches
-        self._attempts += 1
-        be.last_timing = None        # a failed launch must not report stale
         try:
-            p, c, new_d, cached_d = be.run_group(
-                ids, self._tok[launch.model], launch.bucket, launch.f_len,
-                launch.fraction, launch.cached_len,
-                self._op_tokens(be, launch.op_id), self.n_classes,
-                op_id=launch.op_id)
+            p, c, new_d, cached_d = be.complete_group(fl.group)
         except Exception as exc:        # noqa: BLE001 — isolate the launch
-            # fresh stamp: retry/terminal events must postdate any fault
-            # events the injector recorded DURING the failed launch (and
-            # the retry backoff anchors at the failure, not the dispatch)
+            # faults surface at completion now: the injector's failure
+            # raises here (and real device errors surface at sync), so
+            # retry/terminal stamps postdate the fault events
             self._on_launch_failure(launch, exc, time.perf_counter(),
                                     terminal)
-            self._record_launch(launch, len(ids), t_begin, t_sched, be,
-                                ok=False, error=str(exc))
-            self._note_progress(True)
-            return terminal
+            self._record_flight(fl, ok=False, error=str(exc))
+            return
         health = self._health.get(launch.model)
         if health is not None:
             health.record_success()
@@ -1781,7 +2011,7 @@ class CascadeServer:
                 tm.event(rid, EV_LAUNCH, now,
                          {"sig": sig, "batch": len(ids),
                           "stage": self._requests[rid].stage,
-                          "launch": launch_idx})
+                          "launch": self._launches})
         touched: Dict[int, None] = {}           # queries in this launch
         for i, rid in enumerate(ids):
             req = self._requests[rid]
@@ -1823,46 +2053,59 @@ class CascadeServer:
             self._query_stats[qid].batches += 1
         # retirement ticks on EVERY backend: one that stops receiving
         # launches must still free arenas its drifted length mix pinned
+        # (safe under open tickets: their live docs keep buckets unretired)
         retired = sum(b.note_launch() for b in self.backends.values()
                       if hasattr(b, "note_launch"))
         if retired:
             self._note_retired(retired)
+        self._record_flight(fl, ok=True)
         if self.faults is not None:     # planned arena-loss events, if any
-            for bname, bucket in self.faults.poll_arena_loss(
-                    self._launches, self.backends):
+            losses = self.faults.poll_arena_loss(self._launches,
+                                                 self.backends)
+            if losses and self._flights:
+                # releasing a lost arena's rows would hit open tickets:
+                # drain them first (poll fires at most once — the nested
+                # completions cannot re-enter this branch)
+                self._complete_flights(terminal)
+            for bname, bucket in losses:
                 self._apply_arena_loss(bname, bucket)
-        self._record_launch(launch, len(ids), t_begin, t_sched, be, ok=True)
-        self._note_progress(True)
-        return terminal
 
-    def _record_launch(self, launch: LaunchSpec, batch: int, t_begin: float,
-                       t_sched: float, be: Any, ok: bool,
+    def _record_flight(self, fl: _Flight, ok: bool,
                        error: Optional[str] = None) -> None:
         """Close out one launch's timeline record.  Dispatch and device
-        segments come from the backend's direct measurement around the
-        jitted step; scheduler-pick is the pre-launch boundary stamp; the
-        host segment is the residual, so the four sum to the step's wall
-        clock exactly."""
+        segments come from the ticket's direct measurement around the
+        jitted step and its sync; scheduler-pick is the pre-launch
+        boundary stamp; the host segment is the residual, so the four
+        sum to the record's wall clock exactly.  Overlapped records also
+        carry the dispatch-return -> sync-begin window (``inflight_s``)
+        and their enqueue/ready stamps for the gap histogram."""
         tm = self.telemetry
         if not tm.enabled:
             return
         t_end = time.perf_counter()
-        timing = getattr(be, "last_timing", None) or {}
+        g = fl.group
+        timing = (g.timing if g is not None else None) or {}
         dispatch = timing.get("dispatch", 0.0)
         device = timing.get("device", 0.0)
-        wall = t_end - t_begin
-        sched = t_sched - t_begin
+        launch = fl.launch
+        batch = len(launch.doc_ids)
+        wall = t_end - fl.t_begin
+        sched = fl.t_sched - fl.t_begin
         host = max(wall - sched - dispatch - device, 0.0)
         rec = LaunchRecord(
-            index=self._attempts - 1, ts_start=t_begin, model=launch.model,
+            index=fl.attempt, ts_start=fl.t_begin, model=launch.model,
             op_id=launch.op_id, bucket=launch.bucket,
             cached_len=launch.cached_len, f_len=launch.f_len, batch=batch,
             width=_pad_width(batch), sched_s=sched, host_s=host,
             dispatch_s=dispatch, device_s=device, wall_s=wall,
-            copy_bytes=getattr(be, "last_copy_bytes", 0) if ok else 0,
-            ok=ok, error=error)
+            copy_bytes=g.copy_bytes if (ok and g is not None) else 0,
+            ok=ok, error=error,
+            ts_enqueue=g.ts_enqueue if g is not None else 0.0,
+            ts_ready=g.ts_ready if g is not None else 0.0,
+            inflight_s=(max(g.ts_sync - g.ts_dispatched, 0.0)
+                        if g is not None and g.ts_sync > 0.0 else 0.0))
         if ok and rec.decode_only:
-            hbm = getattr(be, "last_hbm_bytes", None)
+            hbm = g.hbm_bytes if g is not None else None
             if hbm and device > 0.0:
                 rec.hbm_bytes = hbm
                 rec.bw_util = _bw_util(hbm, device)
@@ -2227,6 +2470,9 @@ class CascadeServer:
             "failed_launches": self._failed_launches,
             "queue_depth": len(self._queue),
             "occupancy": self.occupancy(),
+            # peak dispatch-window depth actually reached (the CI overlap
+            # gate requires >= 2 on the --inflight legs)
+            "max_inflight": self._max_inflight_seen,
         }
         if self.telemetry.tracing:
             snap["spans"] = self.telemetry.validate_spans(

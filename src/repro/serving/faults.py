@@ -7,28 +7,34 @@ exactly reproducible.
 
 Injected fault classes
 ----------------------
-launch failure   ``run_group`` raises ``InjectedLaunchFailure`` before the
-                 model step executes.  Backends allocate slots before the
-                 jitted step and only commit arena state afterwards, so a
-                 failed launch leaves no partial state; the engine
-                 re-enqueues each member document solo with backoff.
+launch failure   the launch is poisoned at DISPATCH (the model step is
+                 never enqueued, so no partial state exists) but the
+                 ``InjectedLaunchFailure`` SURFACES at completion — where
+                 a real device-side error would surface under async
+                 dispatch; the engine re-enqueues each member document
+                 solo with backoff.
 non-finite conf  one document's confidence entry in the returned batch is
-                 overwritten with NaN *after* a successful step — the
-                 billing already happened, mirroring a real model emitting
-                 garbage logits.  The engine quarantines that document.
-latency spike    ``run_group`` sleeps ``spike_s`` before stepping,
-                 exercising deadline/timeout paths without touching
-                 results.
+                 overwritten with NaN at completion, *after* a successful
+                 step — the billing already happened, mirroring a real
+                 model emitting garbage logits.  The engine quarantines
+                 that document.
+latency spike    completion sleeps ``spike_s`` before syncing (a slow
+                 device launch: the host pays the stall when it needs the
+                 results), exercising deadline/timeout paths without
+                 touching results.
 arena loss       at a planned launch index the injector reports the
                  (backend, bucket) holding the most live documents as
                  lost; the engine replays the eviction path (release slot,
                  zero cached length) so the next launch re-prefills.
 
-Determinism: the injector draws a FIXED number of uniforms per
-``run_group`` call (one per probabilistic fault class, drawn whether or
-not the fault fires) plus one per NaN event to pick the victim row, so
-the fault schedule depends only on ``FaultPlan.seed`` and the sequence of
-launches — not on which faults happened to fire earlier.
+Determinism: the injector draws a FIXED number of uniforms per dispatch
+(one per probabilistic fault class, drawn whether or not the fault
+fires) plus one per NaN event — drawn at completion — to pick the
+victim row, so the fault schedule depends only on ``FaultPlan.seed`` and
+the sequence of launches — not on which faults happened to fire earlier.
+With one launch in flight the draw/pick interleaving is exactly the
+pre-split order; with K>1, dispatch-order draws plus FIFO-completion
+picks keep the schedule a pure function of the dispatch sequence.
 
 Usage::
 
@@ -155,12 +161,49 @@ class FaultInjector:
         return self
 
 
+class _InjectedTicket:
+    """Fault wrapper around a backend's ``GroupTicket``: carries the
+    completion-time effects (spike sleep, injected failure, NaN
+    corruption) decided at dispatch.  Poisoned tickets (injected launch
+    failure) have NO inner ticket — the failure was decided before the
+    model step was enqueued, so no state was committed — and present
+    inert defaults for the timeline fields the server reads on the
+    failed-record path."""
+
+    __slots__ = ("inner", "fail_exc", "corrupt", "spike_s", "ids")
+
+    _POISONED_DEFAULTS = {"timing": None, "ts_enqueue": 0.0,
+                          "ts_dispatched": 0.0, "ts_sync": 0.0,
+                          "ts_ready": 0.0, "copy_bytes": 0,
+                          "hbm_bytes": None}
+
+    def __init__(self, inner: Any, fail_exc: Optional[Exception],
+                 corrupt: bool, spike_s: float, ids: List[int]):
+        self.inner = inner
+        self.fail_exc = fail_exc
+        self.corrupt = corrupt
+        self.spike_s = spike_s
+        self.ids = ids
+
+    def __getattr__(self, name: str) -> Any:
+        inner = object.__getattribute__(self, "inner")
+        if inner is not None:
+            return getattr(inner, name)
+        try:
+            return _InjectedTicket._POISONED_DEFAULTS[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+
 class FaultyBackend:
     """Transparent ``LMBackend`` proxy that injects planned faults.
 
-    Everything except ``run_group`` forwards to the wrapped backend, so
-    slot allocation, eviction, retirement and byte accounting behave
-    exactly as without injection.
+    Everything except the launch path (``dispatch_group`` /
+    ``complete_group`` / ``run_group``) forwards to the wrapped backend,
+    so slot allocation, eviction, retirement and byte accounting behave
+    exactly as without injection.  The fault schedule is drawn at
+    dispatch; the fault EFFECTS (sleep, raise, NaN) land at completion —
+    where async dispatch surfaces real device errors.
     """
 
     def __init__(self, inner: Any, injector: FaultInjector):
@@ -173,7 +216,12 @@ class FaultyBackend:
     def __setattr__(self, name: str, value: Any) -> None:
         setattr(object.__getattribute__(self, "_inner"), name, value)
 
-    def run_group(self, *args, **kwargs):
+    def dispatch_group(self, *args, **kwargs) -> _InjectedTicket:
+        """Draw this launch's fault schedule, then enqueue the real step
+        (unless the launch is poisoned — then nothing is enqueued and no
+        state commits, exactly the pre-split raise-before-step
+        contract).  Counts and EV_FAULT trace events stamp at draw time
+        so the injection is visible next to the dispatch that chose it."""
         inj: FaultInjector = object.__getattribute__(self, "_injector")
         inner = object.__getattribute__(self, "_inner")
         # The inner backend shares the server's telemetry handle; injected
@@ -184,7 +232,9 @@ class FaultyBackend:
         tm = getattr(inner, "telemetry", None)
         ids = args[0] if args else kwargs.get("ids", [])
         fail, corrupt, spike = inj.draw()
-        if spike and inj.plan.spike_s > 0.0:
+        spike_s = inj.plan.spike_s if (spike
+                                       and inj.plan.spike_s > 0.0) else 0.0
+        if spike_s:
             inj.counts["latency_spikes"] += 1
             if tm is not None and tm.enabled:
                 tm.count("serve_injected_faults_total", 1,
@@ -196,7 +246,6 @@ class FaultyBackend:
                                  {"kind": "latency_spike",
                                   "backend": inner.name,
                                   "spike_s": inj.plan.spike_s})
-            time.sleep(inj.plan.spike_s)
         if fail:
             inj.counts["launch_failures"] += 1
             if tm is not None and tm.enabled:
@@ -208,11 +257,27 @@ class FaultyBackend:
                         tm.event(d, EV_FAULT, ts,
                                  {"kind": "launch_failure",
                                   "backend": inner.name})
-            raise InjectedLaunchFailure(
+            exc = InjectedLaunchFailure(
                 f"injected launch failure (call {inj.calls}, "
                 f"model={inner.name})")
-        pred, conf, new_d, cached_d = inner.run_group(*args, **kwargs)
-        if corrupt:
+            return _InjectedTicket(None, exc, False, spike_s, list(ids))
+        ticket = inner.dispatch_group(*args, **kwargs)
+        return _InjectedTicket(ticket, None, corrupt, spike_s, list(ids))
+
+    def complete_group(self, ticket: _InjectedTicket):
+        """Apply the ticket's planned effects where async dispatch
+        surfaces them: sleep out a latency spike, raise a poisoned
+        launch's failure, and corrupt the victim confidence after a
+        successful sync."""
+        inj: FaultInjector = object.__getattribute__(self, "_injector")
+        inner = object.__getattribute__(self, "_inner")
+        tm = getattr(inner, "telemetry", None)
+        if ticket.spike_s:
+            time.sleep(ticket.spike_s)
+        if ticket.fail_exc is not None:
+            raise ticket.fail_exc
+        pred, conf, new_d, cached_d = inner.complete_group(ticket.inner)
+        if ticket.corrupt:
             inj.counts["nan_confidences"] += 1
             conf = np.array(conf, dtype=np.float64, copy=True)
             victim = inj.pick_victim(conf.shape[0])
@@ -220,7 +285,13 @@ class FaultyBackend:
             if tm is not None and tm.enabled:
                 tm.count("serve_injected_faults_total", 1,
                          kind="nan_conf", backend=inner.name)
-                if tm.tracing and victim < len(ids):
-                    tm.event(ids[victim], EV_FAULT, time.perf_counter(),
+                if tm.tracing and victim < len(ticket.ids):
+                    tm.event(ticket.ids[victim], EV_FAULT,
+                             time.perf_counter(),
                              {"kind": "nan_conf", "backend": inner.name})
         return pred, conf, new_d, cached_d
+
+    def run_group(self, *args, **kwargs):
+        """Synchronous composition (one ticket in flight): exactly the
+        pre-split fault semantics and RNG draw order."""
+        return self.complete_group(self.dispatch_group(*args, **kwargs))

@@ -332,6 +332,7 @@ class RequestQueue:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         policy: Optional[SchedulingPolicy] = None,
         now: Optional[float] = None,
+        blocked: Optional[Callable[[SignatureKey], bool]] = None,
     ) -> Optional[LaunchSpec]:
         """Pop the next launch, or None when nothing is dispatchable.
 
@@ -347,6 +348,15 @@ class RequestQueue:
         invisible this call; ``solo`` requests form singleton groups so a
         poisoned document retries alone (see the module docstring's
         failure model).  ``now`` defaults to ``time.perf_counter()``.
+
+        ``blocked(key) -> bool`` vetoes whole signature groups before the
+        policy picks one: overlapped ahead-of-time dispatch passes the
+        server's conflict check so no launch is co-scheduled onto arena
+        rows an open ticket still owns (documents in flight are already
+        out of the ready set — this guards the SHARED rows, e.g. a
+        first-touch prefix-row prefill against open readers).  Vetoed
+        groups stay queued and become visible again once the conflicting
+        tickets complete.
         """
         if not self._ready:
             return None
@@ -368,6 +378,9 @@ class RequestQueue:
             groups.setdefault(key, []).append(req)
             if key not in heads or req.key() < heads[key]:
                 heads[key] = req.key()
+        if blocked is not None and groups:
+            groups = {k: v for k, v in groups.items() if not blocked(k)}
+            heads = {k: heads[k] for k in groups}
         if not groups:
             return None
         best_key = (policy or oldest_head_first)(groups, heads)

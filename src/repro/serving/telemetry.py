@@ -51,8 +51,8 @@ checks all three and the smoke gate requires zero violations.
 
 Launch timeline (``level="counters"`` and up)
 ---------------------------------------------
-``CascadeServer.step()`` decomposes each dispatched launch's wall time
-into four disjoint segments that sum to the step's wall clock:
+``CascadeServer.step()`` decomposes each launch's wall time into four
+disjoint segments that sum to the record's wall clock:
 
 ``sched_s``     scheduler pick: deadline sweep, breaker rerouting,
                 ``RequestQueue.next_launch``
@@ -60,7 +60,28 @@ into four disjoint segments that sum to the step's wall clock:
                 threshold routing, queue pushes (the residual of the
                 other three — everything that is not dispatch/device)
 ``dispatch_s``  the jitted stage-step call returning (async dispatch)
-``device_s``    ``jax.block_until_ready`` on the step outputs
+``device_s``    the completion-side ``jax.block_until_ready`` wait
+
+SEGMENT SEMANTICS UNDER OVERLAPPED DISPATCH (``CascadeServer.inflight``
+> 1): timing is PER-TICKET and never forces synchronization — the
+dispatch segment stamps around the non-blocking ``dispatch_group``
+enqueue, the device segment stamps around ``complete_group``'s sync,
+and the window in between (dispatch returned, sync not yet entered:
+the launch computing on-device while the host schedules/dispatches
+OTHER launches) is recorded separately as the record's ``inflight_s``.
+``inflight_s`` is NOT one of the four wall-clock segments: a record's
+wall spans dispatch of younger launches at K>1, so walls of
+consecutive records overlap and ``host_s`` — still the residual —
+absorbs the in-flight window (the four segments still sum to ``wall_s``
+exactly).  The hidden window is the overlap win:
+``timeline["overlap_hidden_frac"] = inflight / (inflight + device)``
+(≈0 at ``inflight=1``, → 1 when sched+host work fully hides device
+waits), and ``timeline["mean_launch_gap_ms"]`` measures
+``max(enqueue(next) - ready(prev), 0)`` over consecutive ok records —
+the device idle window between launches, which ahead-of-time dispatch
+drives toward zero.  At ``inflight=1`` every stamp reduces to the
+pre-overlap decomposition (``device_s`` measured immediately after
+dispatch; ``inflight_s`` ~ 0).
 
 The old ``LMBackend.host_overhead_s`` scalar survives as a derived view:
 it accumulates ``host assembly + dispatch`` exactly as before, and
@@ -354,6 +375,12 @@ class LaunchRecord:
     bw_util: Optional[float] = None     # fraction of the HBM roof achieved
     ok: bool = True
     error: Optional[str] = None
+    # per-ticket overlap stamps (0.0 when the launch never dispatched)
+    ts_enqueue: float = 0.0        # perf_counter entering the jit call
+    ts_ready: float = 0.0          # perf_counter after block_until_ready
+    inflight_s: float = 0.0        # dispatched->sync window hidden behind
+    #                                other launches' sched/host work; NOT
+    #                                a wall-clock segment (see docstring)
 
     @property
     def occupancy(self) -> float:
@@ -399,6 +426,8 @@ class Telemetry:
         self.dispatch_total_s = 0.0
         self.device_total_s = 0.0
         self.wall_total_s = 0.0
+        self.inflight_total_s = 0.0
+        self._prev_ready = 0.0      # last ok record's ts_ready (gap histo)
         self._doc_meta: Dict[int, Tuple[int, int]] = {}
 
     # -- levels ----------------------------------------------------------
@@ -499,6 +528,14 @@ class Telemetry:
         self.dispatch_total_s += rec.dispatch_s
         self.device_total_s += rec.device_s
         self.wall_total_s += rec.wall_s
+        self.inflight_total_s += rec.inflight_s
+        if rec.ok and rec.ts_enqueue > 0.0:
+            # gap histogram: device idle between one launch becoming
+            # ready and the next entering the queue (0 under overlap)
+            if self._prev_ready > 0.0:
+                self.observe("serve_launch_gap_seconds",
+                             max(rec.ts_enqueue - self._prev_ready, 0.0))
+            self._prev_ready = rec.ts_ready
         be = rec.model or "?"
         self.count("serve_launches_total", 1, backend=be,
                    ok=str(rec.ok).lower())
@@ -510,13 +547,22 @@ class Telemetry:
                          backend=be)
 
     def mean_launch_gap_s(self) -> float:
-        """Mean host-side gap between consecutive surviving launch
-        records (end of one launch to start of the next) — the device
-        idle window ROADMAP item 2's async dispatch targets."""
+        """Mean device idle window between consecutive surviving launch
+        records — the gap ROADMAP item 2's async dispatch targets.
+
+        When both records carry per-ticket stamps the gap is
+        ``max(enqueue(next) - ready(prev), 0)``: zero whenever the next
+        launch was enqueued before the previous one's results were
+        needed (the overlap win), so zeros COUNT toward the mean.
+        Stamp-less records (never dispatched) fall back to the legacy
+        wall-clock formula over positive gaps."""
         recs = [r for r in self.launches.items() if r.ok]
-        gaps = [b.ts_start - (a.ts_start + a.wall_s)
-                for a, b in zip(recs, recs[1:])
-                if b.ts_start >= a.ts_start + a.wall_s]
+        gaps: List[float] = []
+        for a, b in zip(recs, recs[1:]):
+            if a.ts_ready > 0.0 and b.ts_enqueue > 0.0:
+                gaps.append(max(b.ts_enqueue - a.ts_ready, 0.0))
+            elif b.ts_start >= a.ts_start + a.wall_s:
+                gaps.append(b.ts_start - (a.ts_start + a.wall_s))
         return sum(gaps) / len(gaps) if gaps else 0.0
 
     # -- summaries -------------------------------------------------------
@@ -535,6 +581,9 @@ class Telemetry:
     def snapshot(self) -> Dict[str, Any]:
         """Plain-dict summary: ``counters`` are structural (gateable),
         ``timeline`` are wall-clock timings (never gated)."""
+        # local import: roofline depends only on stdlib, but serving
+        # modules must stay importable without the launch package cycle
+        from ..launch.roofline import overlap_hidden_fraction
         utils = [r.bw_util for r in self.launches.items()
                  if r.bw_util is not None]
         return {
@@ -559,6 +608,9 @@ class Telemetry:
                 # derived view of the pre-telemetry lumped scalar
                 "host_overhead_s": self.host_total_s + self.dispatch_total_s,
                 "idle_wait_s": self.idle_wait_s,
+                "inflight_s": self.inflight_total_s,
+                "overlap_hidden_frac": overlap_hidden_fraction(
+                    self.inflight_total_s, self.device_total_s),
                 "mean_launch_gap_ms": 1e3 * self.mean_launch_gap_s(),
                 "decode_bw_util_mean": (sum(utils) / len(utils)
                                         if utils else 0.0),
@@ -578,6 +630,8 @@ class Telemetry:
         self.dispatch_total_s = 0.0
         self.device_total_s = 0.0
         self.wall_total_s = 0.0
+        self.inflight_total_s = 0.0
+        self._prev_ready = 0.0
         self._doc_meta.clear()
 
 
